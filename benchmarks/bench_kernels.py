@@ -1,0 +1,90 @@
+"""Join-kernel microbench: CPU wall time of the XLA-compiled device paths
+(popcount vs one-hot) + analytic TPU roofline per kernel variant.
+
+Pallas interpret mode is a correctness harness, not a timing one; on this
+CPU container the *compiled* jnp twins of the kernels are what we time.
+The TPU projection uses per-tile byte/flop counts of each kernel design
+(DESIGN.md §5): popcount moves 16x fewer HBM bytes, one-hot rides the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sets import SetCollection
+from repro.core.tile_join import (_onehot_qualify, _popcount_qualify,
+                                  window_bounds)
+from repro.data.synth import make_join_dataset
+from repro.launch.analysis import HBM_BW, PEAK_FLOPS
+
+from .common import emit, timed
+
+T = 0.5
+
+
+def _prep(R, S):
+    Ss = S.sort_by_size()
+    universe = max(R.universe, S.universe)
+    W = (universe + 31) // 32
+    lo, hi = window_bounds(R.sizes(), Ss.sizes(), T)
+    return (jnp.asarray(R.bitmaps(W)), jnp.asarray(R.sizes()),
+            jnp.asarray(Ss.bitmaps(W)), jnp.asarray(Ss.sizes()),
+            jnp.asarray(lo), jnp.asarray(hi), universe, Ss)
+
+
+def tpu_projection(m, n, universe, skip_frac=0.0):
+    """Roofline seconds per R-S block for each kernel design."""
+    W = (universe + 31) // 32
+    live = 1.0 - skip_frac
+    # popcount: bytes = bitmaps in + bool out; VPU ops ~ 2 per word-pair
+    pop_bytes = (m * W + n * W) * 4 + m * n
+    pop_ops = 2.0 * m * n * W * live          # AND+popcount per uint32 lane
+    # one-hot: same bitmap bytes in; MXU flops = 2*m*n*(32W)
+    oh_flops = 2.0 * m * n * (32 * W) * live
+    return {
+        "popcount_s": max(pop_bytes / HBM_BW, pop_ops / (PEAK_FLOPS / 64)),
+        "onehot_s": max(pop_bytes / HBM_BW, oh_flops / PEAK_FLOPS),
+    }
+
+
+def main() -> dict:
+    out = {}
+    for ds in ("dblp", "enron"):
+        R, S = make_join_dataset(ds, scale=0.04, seed=6)
+        r_bm, r_sz, s_bm, s_sz, lo, hi, universe, Ss = _prep(R, S)
+        m, n = r_bm.shape[0], s_bm.shape[0]
+
+        def pop():
+            return _popcount_qualify(r_bm, r_sz, s_bm, s_sz, lo, hi, t=T
+                                     ).block_until_ready()
+
+        pop()  # compile
+        _, t_pop = timed(pop, repeat=3)
+
+        r_pad, _ = R.padded()
+        s_pad, _ = Ss.padded()
+        r_pad, s_pad = jnp.asarray(r_pad), jnp.asarray(s_pad)
+
+        def oh():
+            return _onehot_qualify(r_pad, r_sz, s_pad, s_sz, lo, hi, t=T,
+                                   universe=universe).block_until_ready()
+
+        oh()
+        _, t_oh = timed(oh, repeat=3)
+        # tile-skip fraction from the windows
+        cols = np.arange(n)
+        in_win = ((cols[None, :] >= np.asarray(lo)[:, None])
+                  & (cols[None, :] < np.asarray(hi)[:, None]))
+        skip = 1.0 - in_win.mean()
+        proj = tpu_projection(m, n, universe, skip)
+        emit(f"kernel/{ds}/popcount_cpu", t_pop,
+             f"tpu_proj_us={proj['popcount_s']*1e6:.1f};skip={skip:.2f}")
+        emit(f"kernel/{ds}/onehot_cpu", t_oh,
+             f"tpu_proj_us={proj['onehot_s']*1e6:.1f}")
+        out[ds] = {"pop": t_pop, "oh": t_oh, **proj}
+    return out
+
+
+if __name__ == "__main__":
+    main()

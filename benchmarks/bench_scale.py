@@ -1,0 +1,43 @@
+"""Paper Figs. 10-11: scalability vs data scale and vs shard count (t=0.4).
+
+Data-scale sweep measures wall time at 25/50/100% of the bench dataset.
+Shard-count sweep reports the load-balance speedup model the paper plots:
+total load / max shard load (ideal = n_shards), plus measured time of the
+sequential shard loop (CPU has one core pool; the model captures what the
+cluster would do — DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.partition import load_aware_partition, route
+from repro.data.synth import make_join_dataset
+
+from .common import emit, timed
+
+T = 0.375  # dyadic threshold: exact across f32/f64 comparators
+
+
+def main() -> dict:
+    out = {}
+    for ds in ("dblp", "livej"):
+        for frac in (0.25, 0.5, 1.0):
+            R, S = make_join_dataset(ds, scale=0.08 * frac, seed=3)
+            pairs, secs = timed(mr_cf_rs_join, R, S, T, 8)
+            emit(f"scale/{ds}/frac{frac}", secs, f"pairs={len(pairs)}")
+            out[(ds, frac)] = secs
+    # cluster-size sweep (paper Fig. 11, LiveJ)
+    R, S = make_join_dataset("livej", scale=0.08, seed=3)
+    for shards in (2, 4, 8, 16):
+        part = load_aware_partition(R, S, T, shards)
+        _, _, stats = route(R, S, part)
+        total = sum(stats["shard_loads"])
+        speedup = total / max(stats["max_load"], 1)
+        _, secs = timed(mr_cf_rs_join, R, S, T, shards)
+        emit(f"cluster/livej/shards{shards}", secs,
+             f"model_speedup={speedup:.2f};max_load={stats['max_load']}")
+        out[("livej-shards", shards)] = speedup
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Figs. 6-7: MR-CF-RS-Join vs single-node CF-RS-Join.
+
+Single-node = the faithful pointer-tree CF-RS-Join/LFVT (host reference).
+Distributed = the sharded tile join. We report the runtime ratio vs data
+scale and the per-node memory estimate (tree bytes vs max shard block
+bytes — Fig. 7's halving effect).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.fvt import LFVT
+from repro.core.join import cf_rs_join_lfvt
+from repro.data.synth import make_join_dataset
+
+from .common import emit, timed
+
+
+def _tree_bytes(tree: LFVT) -> int:
+    # 2 ints per tuple + node overhead(3 ptr) — the in-memory LFVT estimate
+    n_tuples = sum(len(s) for s in tree.element_table.values() if False) or 0
+    total = 0
+    stack = list(tree.root.children)
+    while stack:
+        n = stack.pop()
+        total += 8 * len(n.tuples) + 24
+        stack.extend(n.children)
+    return total
+
+
+def main() -> dict:
+    out = {}
+    for ds in ("dblp", "kosarak"):
+        for frac, t in ((0.5, 0.875), (1.0, 0.875), (1.0, 0.375)):
+            R, S = make_join_dataset(ds, scale=0.05 * frac, seed=5)
+            tree = LFVT(S)
+            single, t_single = timed(cf_rs_join_lfvt, R, S, t, tree)
+            stats: dict = {}
+            multi, t_multi = timed(mr_cf_rs_join, R, S, t, 8, stats=stats)
+            assert single == multi, (ds, frac, t)
+            ratio = t_single / max(t_multi, 1e-9)
+            emit(f"speedup/{ds}/frac{frac}/t{t}", t_multi,
+                 f"single_s={t_single:.3f};ratio={ratio:.2f}")
+            emit(f"memory/{ds}/frac{frac}/t{t}", 0.0,
+                 f"tree_bytes={_tree_bytes(tree)};"
+                 f"shard_bytes={stats['shard_block_bytes']}")
+            out[(ds, frac, t)] = ratio
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    """Returns (result, best_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

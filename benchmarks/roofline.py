@@ -1,0 +1,64 @@
+"""Aggregate dry-run + roofline-pass JSONs into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(pattern: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(BASE, pattern))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | dominant | compute_s | memory_s | collective_s "
+           "| useful_flops | roofline_frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['dominant']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def _mem_table(rows, title):
+    print(f"\n# {title}")
+    print("| arch | shape | mesh | HBM GiB | µbatches | compile_s |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['memory']['peak_hbm_estimate']/2**30:.2f} "
+              f"| {r.get('microbatches', 1)} | {r['compile_s']} |")
+
+
+def main() -> dict:
+    roof = load("roofline/*__roofline.json")
+    if roof:
+        print("# Roofline (single-pod 16x16, trip-count-exact analysis pass)")
+        print(table(roof))
+    single = [r for r in load("dryrun/*__16x16.json")]
+    multi = [r for r in load("dryrun/*__2x16x16.json")]
+    if single:
+        _mem_table(single, "Dry-run memory, 16x16 (deployed scan programs, "
+                           "baseline defaults)")
+    if multi:
+        _mem_table(multi, "Dry-run memory, 2x16x16 multi-pod")
+    tuned = load("dryrun_tuned/*__16x16.json")
+    if tuned:
+        _mem_table(tuned, "Dry-run memory, 16x16, tuned (§Perf L2/L3)")
+    return {"roofline_cells": len(roof), "dryrun_cells": len(single) + len(multi),
+            "tuned_cells": len(tuned)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Pytest root conftest: make src/ importable and pin rootdir on sys.path
+(so ``pytest tests/`` works with or without PYTHONPATH=src)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

@@ -1,0 +1,152 @@
+"""MR-CF-RS-Join: the paper's single MapReduce job as a JAX SPMD program.
+
+Mapping (DESIGN.md §2):
+  map     -> host routing via ``core.partition`` (length-range, Eq. 2-3)
+  shuffle -> the sharded device layout itself; bytes counted exactly
+  reduce  -> per-shard candidate-free tile join under ``shard_map``
+
+Two execution paths share the same shard-local compute:
+  * ``shard_map``: one shard per device along the mesh ``data`` axis
+    (optionally x ``pod`` for a second R split) — the production path.
+  * ``loop``: sequential shard loop on one device — used by CPU benchmarks,
+    which report the exact per-shard load model the paper plots (Fig. 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .partition import Partitioning, hash_partition, load_aware_partition, route
+from .sets import SetCollection
+from .tile_join import popcount_counts, qualify, window_bounds
+
+__all__ = ["mr_cf_rs_join", "shard_blocks", "local_join_mask"]
+
+
+# ---------------------------------------------------------------------- #
+# shard-local compute (identical under loop and shard_map)
+# ---------------------------------------------------------------------- #
+def local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t: float,
+                    method: str = "popcount"):
+    """Shard-local candidate-free join -> (m, n) bool qualifying mask."""
+    if method in ("kernel_bitmap", "kernel_onehot"):
+        from repro.kernels import ops as kops
+        fn = kops.bitmap_join if method == "kernel_bitmap" else kops.onehot_join
+        return fn(r_bm, r_sz, s_bm, s_sz, lo, hi, t)
+    counts = popcount_counts(r_bm, s_bm)
+    cols = jnp.arange(s_bm.shape[0], dtype=jnp.int32)[None, :]
+    in_window = (cols >= lo[:, None]) & (cols < hi[:, None])
+    return qualify(counts, r_sz, s_sz, t) & in_window
+
+
+# ---------------------------------------------------------------------- #
+# host map phase: routing + dense shard blocks
+# ---------------------------------------------------------------------- #
+def shard_blocks(R: SetCollection, S: SetCollection, part: Partitioning,
+                 t: float):
+    """Build stacked, padded per-shard arrays (the post-shuffle layout)."""
+    s_rows, r_rows, stats = route(R, S, part)
+    n_shards = part.n_shards
+    universe = max(R.universe, S.universe)
+    W = max((universe + 31) // 32, 1)
+    m_max = max(1, max((len(x) for x in r_rows), default=1))
+    n_max = max(1, max((len(x) for x in s_rows), default=1))
+
+    r_bm = np.zeros((n_shards, m_max, W), np.uint32)
+    s_bm = np.zeros((n_shards, n_max, W), np.uint32)
+    r_sz = np.zeros((n_shards, m_max), np.int32)
+    s_sz = np.zeros((n_shards, n_max), np.int32)
+    lo = np.zeros((n_shards, m_max), np.int32)
+    hi = np.zeros((n_shards, m_max), np.int32)
+    r_ids = np.full((n_shards, m_max), -1, np.int64)
+    s_ids = np.full((n_shards, n_max), -1, np.int64)
+
+    for k in range(n_shards):
+        if s_rows[k]:
+            sub = SetCollection([S.sets[i] for i in s_rows[k]], universe,
+                                S.ids[s_rows[k]]).sort_by_size()
+            ns = len(sub)
+            s_bm[k, :ns] = sub.bitmaps(W)
+            s_sz[k, :ns] = sub.sizes()
+            s_ids[k, :ns] = sub.ids
+        if r_rows[k]:
+            subr = SetCollection([R.sets[i] for i in r_rows[k]], universe,
+                                 R.ids[r_rows[k]])
+            mr = len(subr)
+            r_bm[k, :mr] = subr.bitmaps(W)
+            sizes = subr.sizes()
+            r_sz[k, :mr] = sizes
+            r_ids[k, :mr] = subr.ids
+            if s_rows[k]:
+                l, h = window_bounds(sizes, s_sz[k, : len(s_rows[k])], t)
+                lo[k, :mr] = l
+                hi[k, :mr] = h
+    stats["shard_block_bytes"] = int(r_bm.nbytes + s_bm.nbytes) // n_shards
+    return (r_bm, r_sz, s_bm, s_sz, lo, hi), (r_ids, s_ids), stats
+
+
+# ---------------------------------------------------------------------- #
+# reduce phase
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("t", "method"))
+def _loop_reduce(blocks, *, t: float, method: str):
+    def per_shard(args):
+        r_bm, r_sz, s_bm, s_sz, lo, hi = args
+        return local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method)
+    return jax.lax.map(per_shard, blocks)
+
+
+def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str):
+    spec = P(axis)
+    def body(r_bm, r_sz, s_bm, s_sz, lo, hi):
+        mask = local_join_mask(r_bm[0], r_sz[0], s_bm[0], s_sz[0],
+                               lo[0], hi[0], t, method)
+        return mask[None]
+    fn = shard_map(body, mesh=mesh, in_specs=(spec,) * 6, out_specs=spec)
+    placed = tuple(
+        jax.device_put(jnp.asarray(b), NamedSharding(mesh, spec)) for b in blocks
+    )
+    return jax.jit(fn)(*placed)
+
+
+def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
+                  n_shards: int, strategy: str = "load_aware",
+                  method: str = "popcount", mesh: Mesh | None = None,
+                  axis: str = "data", stats: dict | None = None) -> set:
+    """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
+
+    strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
+    mesh:     if given, reduce runs under shard_map on ``axis`` (whose size
+              must equal ``n_shards``); otherwise a sequential shard loop.
+    """
+    if not len(R) or not len(S):
+        return set()
+    part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
+        R, S, t, n_shards)
+    blocks, (r_ids, s_ids), route_stats = shard_blocks(R, S, part, t)
+    if mesh is not None:
+        assert mesh.shape[axis] == part.n_shards, (mesh.shape, part.n_shards)
+        masks = np.asarray(_shard_map_reduce(blocks, mesh, axis, t=t, method=method))
+    else:
+        masks = np.asarray(
+            _loop_reduce(tuple(jnp.asarray(b) for b in blocks), t=t, method=method)
+        )
+    pairs: set = set()
+    for k in range(part.n_shards):
+        rr, ss = np.nonzero(masks[k])
+        pairs.update(
+            (int(r_ids[k, i]), int(s_ids[k, j]))
+            for i, j in zip(rr, ss)
+            if r_ids[k, i] >= 0 and s_ids[k, j] >= 0
+        )
+    if stats is not None:
+        stats.update(route_stats)
+        stats["intervals"] = part.intervals
+        stats["psi"] = part.psi
+        stats["n_shards"] = part.n_shards
+    return pairs

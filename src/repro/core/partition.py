@@ -1,0 +1,174 @@
+"""Load-aware length-range partitioning (paper §4, Eq. 2–3) + hash baseline.
+
+The map phase routes every ``S_j`` to the single shard owning its length
+and every ``R_i`` to *all* shards whose S-length interval intersects the
+Lemma-3.1 window ``[ceil(t|R|), floor(|R|/t)]``. Shard boundaries minimize
+the heaviest shard load ``psi`` via the dynamic program of Eq. 2, where a
+shard's load (Eq. 3) models its search phase (R elements x S sets in
+range) plus its build phase (S elements in range).
+
+This partitioner doubles as the framework's *straggler mitigation* for the
+join: the slowest shard bounds the step, so minimizing max-load is
+minimizing the straggler (paper Fig. 8; EXPERIMENTS.md §Join/partitioning).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .sets import SetCollection
+
+__all__ = ["Partitioning", "load_aware_partition", "hash_partition", "route"]
+
+
+@dataclasses.dataclass
+class Partitioning:
+    """Contiguous length intervals [lb_k, rb_k] per shard + routing rules."""
+
+    intervals: list[tuple[int, int]]  # inclusive bounds, ascending
+    t: float
+    psi: float  # DP estimate of the heaviest shard load
+    strategy: str = "load_aware"
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.intervals)
+
+    def s_shard(self, size: int) -> int:
+        for k, (lb, rb) in enumerate(self.intervals):
+            if lb <= size <= rb:
+                return k
+        # sizes outside every interval (can happen for hash/degenerate cases)
+        return 0 if size < self.intervals[0][0] else self.n_shards - 1
+
+    def r_shards(self, size: int) -> list[int]:
+        lo = int(np.ceil(size * self.t))
+        hi = int(np.floor(size / self.t))
+        return [
+            k for k, (lb, rb) in enumerate(self.intervals)
+            if not (hi < lb or lo > rb)
+        ]
+
+
+def _length_histograms(R: SetCollection, S: SetCollection):
+    max_len = int(max(R.sizes().max(initial=1), S.sizes().max(initial=1)))
+    Cr = np.bincount(R.sizes(), minlength=max_len + 1).astype(np.float64)
+    Cs = np.bincount(S.sizes(), minlength=max_len + 1).astype(np.float64)
+    return Cr, Cs, max_len
+
+
+def _load(lb: int, rb: int, Cr: np.ndarray, Cs: np.ndarray, t: float,
+          pref_i_cr: np.ndarray, pref_cs: np.ndarray, pref_i_cs: np.ndarray) -> float:
+    """Eq. 3 via prefix sums: search load + build load of shard [lb, rb]."""
+    L = len(pref_cs) - 2  # max representable length
+    r_lo = min(int(np.ceil(lb * t)), L)
+    r_hi = min(int(np.floor(rb / t)), L)
+    r_elems = pref_i_cr[r_hi + 1] - pref_i_cr[r_lo] if r_hi >= r_lo else 0.0
+    s_sets = pref_cs[rb + 1] - pref_cs[lb]
+    s_elems = pref_i_cs[rb + 1] - pref_i_cs[lb]
+    return r_elems * s_sets + s_elems
+
+
+def load_aware_partition(R: SetCollection, S: SetCollection, t: float,
+                         n_shards: int) -> Partitioning:
+    """Eq. 2 dynamic program over distinct S lengths (O(L^2 * l))."""
+    Cr, Cs, max_len = _length_histograms(R, S)
+    lengths = np.nonzero(Cs)[0]
+    if len(lengths) == 0:
+        return Partitioning([(1, max_len)], t, 0.0)
+    lmin, lmax = int(lengths[0]), int(lengths[-1])
+    # prefix sums for O(1) Eq.3 evaluation
+    i_arr = np.arange(len(Cr), dtype=np.float64)
+    pref_i_cr = np.concatenate([[0.0], np.cumsum(i_arr * Cr)])
+    pref_cs = np.concatenate([[0.0], np.cumsum(Cs)])
+    pref_i_cs = np.concatenate([[0.0], np.cumsum(i_arr * Cs)])
+
+    def load(lb, rb):
+        return _load(lb, rb, Cr, Cs, t, pref_i_cr, pref_cs, pref_i_cs)
+
+    # DP over candidate boundaries = the distinct occupied lengths
+    cand = [int(x) for x in lengths]  # ascending
+    K = len(cand)
+    n_shards = min(n_shards, K)
+    INF = float("inf")
+    # psi[l][k]: best max-load splitting cand[0..k] into l shards
+    psi = np.full((n_shards + 1, K), INF)
+    cut = np.full((n_shards + 1, K), -1, dtype=np.int64)
+    for k in range(K):
+        psi[1][k] = load(lmin, cand[k])
+    for l in range(2, n_shards + 1):
+        for k in range(l - 1, K):
+            for c in range(l - 2, k):  # last shard covers cand[c+1..k]
+                v = max(psi[l - 1][c], load(cand[c] + 1, cand[k]))
+                if v < psi[l][k]:
+                    psi[l][k] = v
+                    cut[l][k] = c
+    # recover intervals
+    intervals: list[tuple[int, int]] = []
+    l, k = n_shards, K - 1
+    hi = lmax
+    while l > 1:
+        c = int(cut[l][k])
+        intervals.append((cand[c] + 1, hi))
+        hi = cand[c]
+        k, l = c, l - 1
+    intervals.append((lmin, hi))
+    intervals.reverse()
+    return Partitioning(intervals, t, float(psi[n_shards][K - 1]))
+
+
+def hash_partition(R: SetCollection, S: SetCollection, t: float,
+                   n_shards: int) -> Partitioning:
+    """Paper §5.3.1 baseline: full S on every shard, R split evenly.
+
+    Encoded as a single all-covering interval repeated; ``route`` special-
+    cases the strategy.
+    """
+    _, _, max_len = _length_histograms(R, S)
+    return Partitioning([(1, max_len)] * n_shards, t, float("nan"),
+                        strategy="hash")
+
+
+def route(R: SetCollection, S: SetCollection, part: Partitioning):
+    """Map phase: shard id lists for S (one each) and R (one or more each).
+
+    Returns (s_rows_per_shard, r_rows_per_shard, stats) where stats counts
+    the exact shuffle volume (the paper's "disk usage" metric): 4 bytes per
+    routed element id + 8 bytes per routed (set id, size) header.
+    """
+    n = part.n_shards
+    s_rows: list[list[int]] = [[] for _ in range(n)]
+    r_rows: list[list[int]] = [[] for _ in range(n)]
+    s_sizes, r_sizes = S.sizes(), R.sizes()
+    if part.strategy == "hash":
+        for row in range(len(S)):
+            for k in range(n):
+                s_rows[k].append(row)
+        for row in range(len(R)):
+            r_rows[row % n].append(row)
+    else:
+        for row, sz in enumerate(s_sizes):
+            s_rows[part.s_shard(int(sz))].append(row)
+        for row, sz in enumerate(r_sizes):
+            for k in part.r_shards(int(sz)):
+                r_rows[k].append(row)
+    elem_bytes = 4
+    header = 8
+    shuffle = sum(
+        sum(int(s_sizes[r]) * elem_bytes + header for r in rows) for rows in s_rows
+    ) + sum(
+        sum(int(r_sizes[r]) * elem_bytes + header for r in rows) for rows in r_rows
+    )
+    loads = [
+        sum(int(r_sizes[i]) for i in r_rows[k]) * max(len(s_rows[k]), 1)
+        + sum(int(s_sizes[j]) for j in s_rows[k])
+        for k in range(n)
+    ]
+    stats = {
+        "shuffle_bytes": shuffle,
+        "shard_loads": loads,
+        "max_load": max(loads) if loads else 0,
+        "r_replication": sum(len(x) for x in r_rows) / max(len(R), 1),
+    }
+    return s_rows, r_rows, stats

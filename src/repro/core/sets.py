@@ -1,0 +1,137 @@
+"""Set-collection representations for the CF-RS-Join.
+
+The paper operates on ragged collections of integer-element sets. On a TPU
+we need dense, tile-friendly layouts. This module owns every representation
+and the (host-side, numpy) conversions between them:
+
+  ragged   : list[np.ndarray]                     -- input format
+  padded   : (n, max_len) int32, -1 padded        -- gather-friendly
+  csr      : inverted index  element -> set ids   -- the "element table"
+  bitmap   : (n, ceil(U/32)) uint32               -- popcount kernel input
+  onehot   : produced blockwise on device         -- MXU kernel input
+
+``SetCollection`` also carries the descending-size sort that replaces the
+FVT's "bigger sets closer to the root" invariant (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["SetCollection", "length_filter_bounds", "jaccard"]
+
+
+def _as_ragged(sets: Sequence[np.ndarray]) -> list[np.ndarray]:
+    out = []
+    for s in sets:
+        a = np.asarray(s, dtype=np.int32)
+        if a.ndim != 1:
+            raise ValueError(f"each set must be 1-D, got shape {a.shape}")
+        out.append(np.unique(a))  # sets: dedupe + sort elements
+    return out
+
+
+@dataclasses.dataclass
+class SetCollection:
+    """A collection of sets over a dense integer universe ``[0, universe)``.
+
+    Invariant: ``sets`` are element-sorted and deduplicated. When
+    ``sorted_by_size`` is True, sets are ordered by (size desc, id asc) and
+    ``ids[k]`` maps row ``k`` back to the original set id — the array
+    analogue of the FVT size ordering.
+    """
+
+    sets: list[np.ndarray]
+    universe: int
+    ids: np.ndarray  # (n,) int32 original ids per row
+    sorted_by_size: bool = False
+
+    # ------------------------------------------------------------------ #
+    # constructors
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def from_ragged(cls, sets: Sequence[np.ndarray], universe: int | None = None):
+        ragged = _as_ragged(sets)
+        if universe is None:
+            universe = int(max((int(s[-1]) for s in ragged if len(s)), default=-1)) + 1
+        for s in ragged:
+            if len(s) and (s[0] < 0 or s[-1] >= universe):
+                raise ValueError("element id outside universe")
+        return cls(ragged, universe, np.arange(len(ragged), dtype=np.int32))
+
+    def sort_by_size(self) -> "SetCollection":
+        """Order rows by (|S| desc, id asc) — the FVT root-ward invariant."""
+        sizes = self.sizes()
+        order = np.lexsort((self.ids, -sizes))
+        return SetCollection(
+            [self.sets[i] for i in order],
+            self.universe,
+            self.ids[order],
+            sorted_by_size=True,
+        )
+
+    # ------------------------------------------------------------------ #
+    # views
+    # ------------------------------------------------------------------ #
+    def __len__(self) -> int:
+        return len(self.sets)
+
+    def sizes(self) -> np.ndarray:
+        return np.asarray([len(s) for s in self.sets], dtype=np.int32)
+
+    def padded(self, pad_to: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """(n, L) int32 with -1 padding, plus (n,) sizes."""
+        sizes = self.sizes()
+        L = int(pad_to if pad_to is not None else max(int(sizes.max(initial=0)), 1))
+        out = np.full((len(self), L), -1, dtype=np.int32)
+        for i, s in enumerate(self.sets):
+            out[i, : len(s)] = s
+        return out, sizes
+
+    def csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """Inverted index (element table): ``indptr`` (U+1,), ``setids``.
+
+        ``setids[indptr[a]:indptr[a+1]]`` are the rows containing element
+        ``a``. When the collection is size-sorted this is exactly the
+        paper's ``seq(a)`` (size-descending), stored as one linear array —
+        the LFVT layout.
+        """
+        counts = np.zeros(self.universe + 1, dtype=np.int64)
+        for s in self.sets:
+            counts[s + 1] += 1
+        indptr = np.cumsum(counts)
+        setids = np.empty(int(indptr[-1]), dtype=np.int32)
+        cursor = indptr[:-1].copy()
+        for row, s in enumerate(self.sets):
+            setids[cursor[s]] = row
+            cursor[s] += 1
+        return indptr.astype(np.int64), setids
+
+    def bitmaps(self, words: int | None = None) -> np.ndarray:
+        """(n, W) uint32 membership bitmaps; bit ``a%32`` of word ``a//32``."""
+        W = words if words is not None else max((self.universe + 31) // 32, 1)
+        out = np.zeros((len(self), W), dtype=np.uint32)
+        for i, s in enumerate(self.sets):
+            np.bitwise_or.at(out[i], s // 32, np.uint32(1) << (s % 32).astype(np.uint32))
+        return out
+
+    def total_elements(self) -> int:
+        return int(self.sizes().sum())
+
+
+# ---------------------------------------------------------------------- #
+# similarity + filter helpers (host reference semantics, float64)
+# ---------------------------------------------------------------------- #
+def jaccard(a: np.ndarray, b: np.ndarray) -> float:
+    inter = len(np.intersect1d(a, b, assume_unique=True))
+    union = len(a) + len(b) - inter
+    return inter / union if union else 1.0
+
+
+def length_filter_bounds(r_size: int | np.ndarray, t: float):
+    """Lemma 3.1: Jaccard(R,S) >= t implies ceil(t|R|) <= |S| <= floor(|R|/t)."""
+    lo = np.ceil(np.asarray(r_size, dtype=np.float64) * t).astype(np.int64)
+    hi = np.floor(np.asarray(r_size, dtype=np.float64) / t).astype(np.int64)
+    return lo, hi

@@ -1,0 +1,192 @@
+"""TPU-native candidate-free tile join (DESIGN.md §2).
+
+The FVT traversal becomes a tiled intersection accumulation over a
+size-sorted S:
+
+  * S is sorted by set size descending (the FVT "bigger nearer the root"
+    invariant). The Lemma-3.1 window of any ``R_i`` is then a contiguous
+    column range ``[lo_i, hi_i)`` found by binary search — tile skipping is
+    the Theorem-3.3 early stop at tile granularity.
+  * ``f_{i,j} = sum_a [a in R_i][a in S_j]`` is computed blockwise either
+    on the MXU (one-hot matmul) or the VPU (bitmap popcount) — see
+    ``repro.kernels``. This module provides the pure-jnp forms used as
+    oracles and as the CPU execution path, plus the host driver that
+    streams R blocks and emits qualifying pairs (no candidate pairs are
+    ever materialized in HBM: thresholding happens on-device).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sets import SetCollection
+
+__all__ = [
+    "popcount_counts",
+    "onehot_counts",
+    "qualify",
+    "window_bounds",
+    "cf_rs_join_device",
+]
+
+
+# ---------------------------------------------------------------------- #
+# device-side primitives (pure jnp; kernels mirror these)
+# ---------------------------------------------------------------------- #
+def popcount_counts(r_bitmaps: jax.Array, s_bitmaps: jax.Array) -> jax.Array:
+    """(m, W) x (n, W) uint32 -> (m, n) int32 intersection sizes.
+
+    Blocked over R rows to bound the (mb, n, W) intermediate.
+    """
+    def row_block(rb):  # (mb, W)
+        inter = jnp.bitwise_and(rb[:, None, :], s_bitmaps[None, :, :])
+        return jnp.sum(jax.lax.population_count(inter), axis=-1, dtype=jnp.int32)
+
+    m = r_bitmaps.shape[0]
+    mb = max(1, min(m, 4096 // max(1, s_bitmaps.shape[0] // 1024 + 1)))
+    if m <= mb:
+        return row_block(r_bitmaps)
+    pad = (-m) % mb
+    rp = jnp.pad(r_bitmaps, ((0, pad), (0, 0)))
+    out = jax.lax.map(row_block, rp.reshape(-1, mb, rp.shape[1]))
+    return out.reshape(-1, s_bitmaps.shape[0])[:m]
+
+
+def onehot_counts(r_padded: jax.Array, r_sizes: jax.Array,
+                  s_padded: jax.Array, s_sizes: jax.Array,
+                  universe: int, block: int = 512) -> jax.Array:
+    """Intersection sizes via blocked one-hot matmuls (MXU formulation).
+
+    Streams the universe in ``block``-wide chunks: membership matrices
+    ``B_R (m, block)``, ``B_S (n, block)`` and ``F += B_R @ B_S^T``.
+    """
+    m, n = r_padded.shape[0], s_padded.shape[0]
+    nblocks = -(-universe // block)
+
+    def body(carry, b):
+        start = b * block
+        br = _membership_block(r_padded, start, block)  # (m, block) f32
+        bs = _membership_block(s_padded, start, block)
+        return carry + br @ bs.T, None
+
+    init = jnp.zeros((m, n), jnp.float32)
+    out, _ = jax.lax.scan(body, init, jnp.arange(nblocks))
+    return out.astype(jnp.int32)
+
+
+def _membership_block(padded: jax.Array, start, block: int) -> jax.Array:
+    """One-hot membership of elements in [start, start+block) -> (rows, block)."""
+    rel = padded - start
+    valid = (rel >= 0) & (rel < block) & (padded >= 0)
+    rel = jnp.where(valid, rel, 0)
+    onehot = jax.nn.one_hot(rel, block, dtype=jnp.float32) * valid[..., None]
+    return onehot.sum(axis=1)
+
+
+def qualify(counts: jax.Array, r_sizes: jax.Array, s_sizes: jax.Array,
+            t: float) -> jax.Array:
+    """Jaccard >= t as a boolean tile: f*(1+t) >= t*(|R|+|S|), f > 0."""
+    f = counts.astype(jnp.float32)
+    rhs = t * (r_sizes[:, None] + s_sizes[None, :]).astype(jnp.float32)
+    return (f * (1.0 + t) >= rhs) & (counts > 0)
+
+
+def window_bounds(r_sizes: np.ndarray, s_sizes_desc: np.ndarray, t: float):
+    """Column window [lo, hi) per R row over size-descending S (Lemma 3.1).
+
+    ``s_sizes_desc`` must be non-increasing. Rows outside the window can be
+    skipped entirely (Theorem 3.3 / tile early stop).
+    """
+    asc = s_sizes_desc[::-1]
+    n = len(asc)
+    hi_size = np.floor(r_sizes.astype(np.float64) / t)      # inclusive max size
+    lo_size = np.ceil(r_sizes.astype(np.float64) * t)       # inclusive min size
+    # first index (in desc order) with size <= hi_size:
+    lo = n - np.searchsorted(asc, hi_size, side="right")
+    # one past last index with size >= lo_size:
+    hi = n - np.searchsorted(asc, lo_size, side="left")
+    return lo.astype(np.int64), hi.astype(np.int64)
+
+
+# ---------------------------------------------------------------------- #
+# host driver — streams R blocks, emits qualifying pairs
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("t",))
+def _popcount_qualify(r_bm, r_sz, s_bm, s_sz, col_lo, col_hi, *, t):
+    counts = popcount_counts(r_bm, s_bm)
+    cols = jnp.arange(s_bm.shape[0])[None, :]
+    in_window = (cols >= col_lo[:, None]) & (cols < col_hi[:, None])
+    return qualify(counts, r_sz, s_sz, t) & in_window
+
+
+@functools.partial(jax.jit, static_argnames=("t", "universe"))
+def _onehot_qualify(r_pad, r_sz, s_pad, s_sz, col_lo, col_hi, *, t, universe):
+    counts = onehot_counts(r_pad, r_sz, s_pad, s_sz, universe)
+    cols = jnp.arange(s_pad.shape[0])[None, :]
+    in_window = (cols >= col_lo[:, None]) & (cols < col_hi[:, None])
+    return qualify(counts, r_sz, s_sz, t) & in_window
+
+
+def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
+                      method: str = "popcount", r_block: int = 1024,
+                      stats: dict | None = None) -> set:
+    """Candidate-free device join. Returns {(r_id, s_id)}.
+
+    method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
+            | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU).
+    """
+    if not len(R) or not len(S):
+        return set()
+    Ss = S.sort_by_size() if not S.sorted_by_size else S
+    s_sizes = Ss.sizes()
+    r_sizes_all = R.sizes()
+    lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t)
+
+    universe = max(R.universe, S.universe)
+    if method in ("popcount", "kernel_bitmap"):
+        W = max((universe + 31) // 32, 1)
+        s_rep = jnp.asarray(Ss.bitmaps(W))
+    else:
+        s_pad_np, _ = Ss.padded()
+        s_rep = jnp.asarray(s_pad_np)
+    s_sz = jnp.asarray(s_sizes)
+
+    if method in ("kernel_bitmap", "kernel_onehot"):
+        from repro.kernels import ops as kops  # deferred: optional dep
+
+    pairs: set = set()
+    m = len(R)
+    for start in range(0, m, r_block):
+        stop = min(start + r_block, m)
+        sl = slice(start, stop)
+        sub = SetCollection(R.sets[sl], universe, R.ids[sl])
+        r_sz = jnp.asarray(r_sizes_all[sl])
+        lo = jnp.asarray(lo_all[sl])
+        hi = jnp.asarray(hi_all[sl])
+        if method == "popcount":
+            mask = _popcount_qualify(jnp.asarray(sub.bitmaps(W)), r_sz,
+                                     s_rep, s_sz, lo, hi, t=t)
+        elif method == "onehot":
+            r_pad, _ = sub.padded()
+            mask = _onehot_qualify(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
+                                   lo, hi, t=t, universe=universe)
+        elif method == "kernel_bitmap":
+            mask = kops.bitmap_join(jnp.asarray(sub.bitmaps(W)), r_sz,
+                                    s_rep, s_sz, lo, hi, t)
+        elif method == "kernel_onehot":
+            r_pad, _ = sub.padded()
+            mask = kops.onehot_join(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
+                                    lo, hi, t, universe)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        rr, ss = np.nonzero(np.asarray(mask))
+        pairs.update(
+            (int(R.ids[start + i]), int(Ss.ids[j])) for i, j in zip(rr, ss)
+        )
+    if stats is not None:
+        stats["method"] = method
+        stats["r_blocks"] = -(-m // r_block)
+    return pairs

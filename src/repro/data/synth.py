@@ -1,0 +1,123 @@
+"""Synthetic data: (a) join corpora mimicking the paper's 7 datasets,
+(b) deterministic-seek token streams for LM training.
+
+Table-1 statistics drive the generators: per-dataset (collection size,
+mean/max set length, universe size, Zipf exponent). Scaled-down by
+``scale`` so CPU benchmarks finish; the *relative* behaviour the paper
+plots (threshold sweeps, skew effects) is preserved.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.sets import SetCollection
+
+__all__ = ["DATASETS", "make_join_dataset", "TokenStream", "docs_to_sets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinDatasetSpec:
+    name: str
+    n_sets: int           # |R| = |S| at scale=1.0 (paper Table 1, scaled)
+    universe: int
+    mean_len: float
+    max_len: int
+    zipf_a: float         # element popularity skew
+    len_sigma: float      # lognormal length spread ("concentration range")
+
+
+# scaled-down analogues of the paper's Table 1 datasets
+DATASETS = {
+    "dblp": JoinDatasetSpec("dblp", 5000, 27500, 15.6, 203, 1.3, 0.35),
+    "kosarak": JoinDatasetSpec("kosarak", 5000, 3600, 11.6, 2497, 1.6, 0.9),
+    "livej": JoinDatasetSpec("livej", 15000, 43600, 36.2, 300, 1.4, 0.5),
+    "querylog": JoinDatasetSpec("querylog", 6000, 6000, 1.0, 1, 1.1, 0.0),
+    "enron": JoinDatasetSpec("enron", 3000, 7900, 141.6, 3162, 1.5, 1.0),
+    "orkut": JoinDatasetSpec("orkut", 14000, 72000, 120.0, 14193, 1.4, 1.1),
+    "facebook": JoinDatasetSpec("facebook", 3000, 3110, 20.6, 775, 1.2, 0.25),
+}
+
+
+def _sample_sets(spec: JoinDatasetSpec, n: int, rng: np.random.Generator):
+    if spec.mean_len <= 1.0:
+        lens = np.ones(n, np.int64)
+    else:
+        mu = np.log(spec.mean_len) - spec.len_sigma**2 / 2
+        lens = np.clip(rng.lognormal(mu, spec.len_sigma, n).astype(np.int64),
+                       1, min(spec.max_len, spec.universe))
+    # Zipfian element popularity
+    ranks = np.arange(1, spec.universe + 1, dtype=np.float64)
+    probs = ranks ** (-spec.zipf_a)
+    probs /= probs.sum()
+    sets = []
+    for ln in lens:
+        s = rng.choice(spec.universe, size=int(ln), replace=False, p=probs) \
+            if ln < 64 else _choice_large(rng, spec.universe, int(ln), probs)
+        sets.append(np.unique(s))
+    return sets
+
+
+def _choice_large(rng, universe, ln, probs):
+    """For long sets, sample with replacement then top up — O(ln log ln)."""
+    got = np.unique(rng.choice(universe, size=2 * ln, replace=True, p=probs))
+    if len(got) >= ln:
+        return rng.permutation(got)[:ln]
+    rest = np.setdiff1d(np.arange(universe), got, assume_unique=True)
+    extra = rng.choice(rest, size=ln - len(got), replace=False)
+    return np.concatenate([got, extra])
+
+
+def make_join_dataset(name: str, scale: float = 1.0, seed: int = 0):
+    """Returns disjointly-sampled (R, S) SetCollections (paper §5.1.1)."""
+    spec = DATASETS[name]
+    rng = np.random.default_rng(seed)
+    n = max(int(spec.n_sets * scale), 1)
+    r_sets = _sample_sets(spec, n, rng)
+    s_sets = _sample_sets(spec, n, rng)
+    R = SetCollection.from_ragged(r_sets, universe=spec.universe)
+    S = SetCollection.from_ragged(s_sets, universe=spec.universe)
+    return R, S
+
+
+# ---------------------------------------------------------------------- #
+def docs_to_sets(token_batches: np.ndarray, shingle: int = 1,
+                 universe: int | None = None) -> SetCollection:
+    """Token sequences -> element sets (optionally w-shingles) for dedup."""
+    n, L = token_batches.shape
+    if shingle <= 1:
+        sets = [np.unique(row) for row in token_batches]
+        uni = universe or int(token_batches.max()) + 1
+    else:
+        base = universe or int(token_batches.max()) + 1
+        sets = []
+        for row in token_batches:
+            sh = 0
+            acc = np.zeros(L - shingle + 1, np.int64)
+            for k in range(shingle):
+                acc = acc * 31 + row[k: L - shingle + 1 + k]
+            sets.append(np.unique(acc % (base * 8)))
+        uni = base * 8
+    return SetCollection.from_ragged(sets, universe=uni)
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    """Deterministic-seek synthetic LM data: batch_at(step) is pure in
+    (seed, step) — the property the fault-tolerant loop relies on."""
+
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def batch_at(self, step: int) -> dict:
+        import jax.numpy as jnp
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        toks = rng.integers(0, self.vocab_size,
+                            (self.batch, self.seq_len + 1))
+        return {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32),
+        }

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: candidate-free bitmap-popcount join (VPU path).
+
+The LFVT adaptation (DESIGN.md §2/§5): S membership is packed 32 universe
+elements per uint32 lane. The kernel walks the universe in TW-word blocks
+(the "tree traversal" = the k grid dimension), accumulating intersection
+counts in a VMEM scratch tile, and on the last block applies the Jaccard
+threshold and the Lemma-3.1 column window *in kernel* — only a boolean
+qualifying tile ever leaves VMEM (candidate-free: no pair list, no counts
+are spilled to HBM).
+
+Tile-level early stop (Theorem 3.3): a host-computed (m_tiles, n_tiles)
+skip mask — derived from the size-sorted column windows — gates the whole
+accumulation body with ``pl.when``, so out-of-window tiles do zero VPU
+work, the tile analogue of stopping the root-ward walk.
+
+Grid: (m/TM, n/TN, W/TW), k innermost so the (i, j) output tile is
+revisited across universe blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bitmap_join_tiled", "DEFAULT_TILES"]
+
+# (TM, TN, TW). HBM traffic per output tile ~ (TM+TN)*TW*4 per k-step, so
+# total bitmap re-reads scale with (1/TM + 1/TN): (256,256) halves traffic
+# vs the (128,128) baseline while the AND intermediate (TM,TN,TW)*4B = 2 MiB
+# + 256 KiB acc stay comfortably inside VMEM (EXPERIMENTS.md §Perf/join).
+DEFAULT_TILES = (256, 256, 8)
+
+
+def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
+            out_ref, acc_ref, *, t: float, n_kblocks: int, tn: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(skip_ref[0, 0] == 0)
+    def _accumulate():
+        # (TM, 1, TW) & (1, TN, TW) -> popcount -> (TM, TN)
+        inter = jnp.bitwise_and(r_bm_ref[...][:, None, :], s_bm_ref[...][None, :, :])
+        acc_ref[...] += jnp.sum(
+            jax.lax.population_count(inter).astype(jnp.int32), axis=-1
+        )
+
+    @pl.when(k == n_kblocks - 1)
+    def _qualify():
+        f = acc_ref[...].astype(jnp.float32)
+        sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)  # (TM,1)+(1,TN)
+        cols = pl.program_id(1) * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+        in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
+        out_ref[...] = (f * (1.0 + t) >= t * sizes) & (acc_ref[...] > 0) & in_window
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t", "tiles", "interpret")
+)
+def bitmap_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
+                      *, t: float, tiles=DEFAULT_TILES, interpret: bool = False):
+    """All inputs pre-padded to tile multiples; see ops.bitmap_join.
+
+    r_bitmaps (M, W) uint32 | s_bitmaps (N, W) uint32
+    r_sizes/lo/hi (M, 1) int32 | s_sizes (1, N) int32
+    skip (m_tiles, n_tiles) int32   -> out (M, N) bool
+    """
+    TM, TN, TW = tiles
+    M, W = r_bitmaps.shape
+    N = s_bitmaps.shape[0]
+    assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
+    grid = (M // TM, N // TN, W // TW)
+
+    kernel = functools.partial(_kernel, t=t, n_kblocks=grid[2], tn=TN)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),          # skip
+            pl.BlockSpec((TM, TW), lambda i, j, k: (i, k)),        # r bitmaps
+            pl.BlockSpec((TN, TW), lambda i, j, k: (j, k)),        # s bitmaps
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),         # r sizes
+            pl.BlockSpec((1, TN), lambda i, j, k: (0, j)),         # s sizes
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),         # lo
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),         # hi
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((TM, TN), jnp.int32)],
+        interpret=interpret,
+    )(skip, r_bitmaps, s_bitmaps, r_sizes, s_sizes, lo, hi)

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: causal (optionally windowed) flash attention, fwd.
+
+Why it exists (EXPERIMENTS.md §Perf): the jnp attention path materializes
+softmax scores in HBM — B·H·L² f32 write+read per layer dominates the
+memory roofline term of every prefill cell. Online softmax keeps the
+(bq, bk) score tile and the (bq, D) accumulator in VMEM; HBM traffic drops
+to Q+K+V+O.
+
+Grid (B·H, L/bq, L/bk), kv innermost. Causal/window tiles are skipped with
+``pl.when`` (predicated on TPU — MXU work saved; prefetch still streams,
+which is the residual inefficiency vs a splash-style shrunk grid).
+
+Used on the inference paths (prefill); training keeps the jnp chunked
+implementation (backward kernel out of scope — recompute-based flash bwd
+is the natural next iteration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bhld", "DEFAULT_BLOCKS"]
+
+DEFAULT_BLOCKS = (256, 512)  # (bq, bk)
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, window, l_real: int, bq: int, bk: int,
+            n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal block skip: no k in this tile can be <= any q position
+    relevant = k_start <= q_start + bq - 1
+    if window is not None:
+        relevant &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale         # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (k_pos <= q_pos) & (k_pos < l_real)
+        if window is not None:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "l_real",
+                                             "blocks", "interpret"))
+def flash_attention_bhld(q, k, v, *, scale: float, window=None,
+                         l_real: int, blocks=DEFAULT_BLOCKS,
+                         interpret=False):
+    """q,k,v (BH, Lpad, D) — pre-merged batchxheads, pre-padded lengths.
+
+    Returns (BH, Lpad, D); rows >= l_real are garbage (caller slices).
+    """
+    bh, lpad, d = q.shape
+    bq, bk = blocks
+    bq, bk = min(bq, lpad), min(bk, lpad)
+    assert lpad % bq == 0 and lpad % bk == 0, (lpad, blocks)
+    grid = (bh, lpad // bq, lpad // bk)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               l_real=l_real, bq=bq, bk=bk, n_kv=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lpad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: candidate-free one-hot matmul join (MXU path).
+
+The FVT traversal as systolic compute (DESIGN.md §2/§5): each universe
+block of TW uint32 words is unpacked in VMEM to a (tile, TW*32) bf16
+membership matrix, and intersection counts accumulate as
+``F += B_R @ B_S^T`` on the MXU with an f32 VMEM accumulator. Counts are
+exact: each product term is 0/1 and per-block sums are < 2^24.
+
+Same candidate-free contract as bitmap_join: Jaccard threshold + window
+applied in kernel, tile-level early stop via the host skip mask, only the
+boolean qualifying tile is written to HBM.
+
+Grid: (m/TM, n/TN, W/TW), k innermost (output revisited across k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["onehot_join_tiled", "DEFAULT_TILES"]
+
+# (TM, TN, TW): matmul K = TW*32 = 256 (MXU-aligned); TN=256 halves S-side
+# bitmap re-reads vs TN=128 at the cost of a 128 KiB f32 accumulator —
+# still VMEM-cheap (unpacked operands: (256, 256) bf16 = 128 KiB each).
+DEFAULT_TILES = (128, 256, 8)
+
+
+def _unpack_bits(words: jax.Array) -> jax.Array:
+    """(rows, TW) uint32 -> (rows, TW*32) bf16 membership matrix."""
+    rows, tw = words.shape
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = jnp.bitwise_and(jnp.right_shift(words[:, :, None], shifts), jnp.uint32(1))
+    return bits.reshape(rows, tw * 32).astype(jnp.bfloat16)
+
+
+def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
+            out_ref, acc_ref, *, t: float, n_kblocks: int, tn: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(skip_ref[0, 0] == 0)
+    def _accumulate():
+        br = _unpack_bits(r_bm_ref[...])              # (TM, K) bf16
+        bs = _unpack_bits(s_bm_ref[...])              # (TN, K) bf16
+        acc_ref[...] += jax.lax.dot_general(
+            br, bs, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == n_kblocks - 1)
+    def _qualify():
+        f = acc_ref[...]
+        counts = f.astype(jnp.int32)
+        sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)
+        cols = pl.program_id(1) * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+        in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
+        out_ref[...] = (f * (1.0 + t) >= t * sizes) & (counts > 0) & in_window
+
+
+@functools.partial(jax.jit, static_argnames=("t", "tiles", "interpret"))
+def onehot_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
+                      *, t: float, tiles=DEFAULT_TILES, interpret: bool = False):
+    """Same contract as bitmap_join_tiled; MXU execution."""
+    TM, TN, TW = tiles
+    M, W = r_bitmaps.shape
+    N = s_bitmaps.shape[0]
+    assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
+    grid = (M // TM, N // TN, W // TW)
+
+    kernel = functools.partial(_kernel, t=t, n_kblocks=grid[2], tn=TN)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, j)),
+            pl.BlockSpec((TM, TW), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TN, TW), lambda i, j, k: (j, k)),
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, TN), lambda i, j, k: (0, j)),
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((TM, 1), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TM, TN), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.bool_),
+        scratch_shapes=[pltpu.VMEM((TM, TN), jnp.float32)],
+        interpret=interpret,
+    )(skip, r_bitmaps, s_bitmaps, r_sizes, s_sizes, lo, hi)

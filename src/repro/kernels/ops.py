@@ -1,0 +1,172 @@
+"""Public jit'd wrappers for the join kernels: padding, skip masks, dispatch.
+
+``bitmap_join`` / ``onehot_join`` accept unpadded device arrays (the layout
+produced by ``SetCollection``), pad to tile multiples, derive the
+tile-level early-stop mask from the per-row windows (Theorem 3.3 at tile
+granularity), invoke the Pallas kernel and slice the result back.
+
+On CPU backends the kernels run with ``interpret=True`` (Python semantics,
+bit-exact); on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+from . import bitmap_join as _bj
+from . import onehot_join as _oj
+
+__all__ = ["bitmap_join", "onehot_join", "pick_tiles"]
+
+
+def _interpret_default():
+    """Off-TPU, run kernels under the Mosaic TPU interpreter (exact)."""
+    if jax.default_backend() == "tpu":
+        return False
+    return pltpu.InterpretParams()
+
+
+def pick_tiles(m: int, n: int, w: int, defaults) -> tuple[int, int, int]:
+    """Shrink default tiles for small problems (pads at most 2x)."""
+    TM, TN, TW = defaults
+    def shrink(size, tile, floor):
+        while tile > floor and tile // 2 >= size:
+            tile //= 2
+        return tile
+    return shrink(m, TM, 8), shrink(n, TN, 128), shrink(w, TW, 1)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _tile_skip_mask(lo, hi, m_tiles, n_tiles, tm, tn):
+    """(m_tiles, n_tiles) int32: 1 if the tile is fully outside all windows.
+
+    Tile (i, j) covers columns [j*tn, (j+1)*tn). It can be skipped iff for
+    every row in the tile, the window [lo, hi) misses that column range —
+    conservatively: min(lo) >= tile_end or max(hi) <= tile_start.
+    """
+    lo2 = lo.reshape(m_tiles, tm)
+    hi2 = hi.reshape(m_tiles, tm)
+    tile_lo = jnp.min(lo2, axis=1)   # (m_tiles,)
+    tile_hi = jnp.max(hi2, axis=1)
+    starts = jnp.arange(n_tiles, dtype=jnp.int32) * tn
+    ends = starts + tn
+    skip = (tile_lo[:, None] >= ends[None, :]) | (tile_hi[:, None] <= starts[None, :])
+    return skip.astype(jnp.int32)
+
+
+def _prepare(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults):
+    m, w = r_bitmaps.shape
+    n = s_bitmaps.shape[0]
+    TM, TN, TW = tiles if tiles is not None else pick_tiles(m, n, w, defaults)
+    rb = _pad_to(_pad_to(r_bitmaps, 0, TM), 1, TW)
+    sb = _pad_to(_pad_to(s_bitmaps, 0, TN), 1, TW)
+    r_sz = _pad_to(r_sizes.astype(jnp.int32), 0, TM).reshape(-1, 1)
+    s_sz = _pad_to(s_sizes.astype(jnp.int32), 0, TN).reshape(1, -1)
+    # padded rows get an empty window [0, 0)
+    lo_p = _pad_to(lo.astype(jnp.int32), 0, TM).reshape(-1, 1)
+    hi_p = _pad_to(hi.astype(jnp.int32), 0, TM).reshape(-1, 1)
+    m_tiles, n_tiles = rb.shape[0] // TM, sb.shape[0] // TN
+    skip = _tile_skip_mask(lo_p[:, 0], hi_p[:, 0], m_tiles, n_tiles, TM, TN)
+    return rb, r_sz, sb, s_sz, lo_p, hi_p, skip, (TM, TN, TW), m, n
+
+
+def bitmap_join(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, t: float,
+                tiles=None, interpret: bool | None = None) -> jax.Array:
+    """(m, n) bool qualifying-pair matrix via the popcount kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n = _prepare(
+        r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, _bj.DEFAULT_TILES)
+    out = _bj.bitmap_join_tiled(rb, r_sz, sb, s_sz, lo_p, hi_p, skip,
+                                t=t, tiles=tls, interpret=interpret)
+    return out[:m, :n]
+
+
+def onehot_join(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo, hi,
+                t: float, universe: int | None = None, tiles=None,
+                interpret: bool | None = None) -> jax.Array:
+    """(m, n) bool qualifying-pair matrix via the MXU one-hot kernel.
+
+    Accepts bitmaps directly; ``universe`` kept for API symmetry. If handed
+    padded element lists (int32 with -1 pads), converts to bitmaps first.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    r_in = r_bitmaps_or_padded
+    if r_in.dtype != jnp.uint32:
+        assert universe is not None, "universe required to pack element lists"
+        r_in = _pack_bitmaps(r_in, universe)
+    if s_bitmaps.dtype != jnp.uint32:
+        assert universe is not None
+        s_bitmaps = _pack_bitmaps(s_bitmaps, universe)
+    W = max(r_in.shape[1], s_bitmaps.shape[1])
+    r_in = _pad_to(r_in, 1, W)
+    s_bitmaps = _pad_to(s_bitmaps, 1, W)
+    rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n = _prepare(
+        r_in, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, _oj.DEFAULT_TILES)
+    out = _oj.onehot_join_tiled(rb, r_sz, sb, s_sz, lo_p, hi_p, skip,
+                                t=t, tiles=tls, interpret=interpret)
+    return out[:m, :n]
+
+
+def flash_attention(q, k, v, window=None, blocks=None, interpret=None):
+    """Causal flash attention. q,k,v (B, L, H, D), kv pre-expanded to H.
+
+    Pads L to block multiples, merges (B, H) into the grid dim, slices the
+    padding back off. Inference-path only (no backward kernel yet).
+    """
+    from . import flash_attention as _fa
+    interpret = _interpret_default() if interpret is None else interpret
+    b, l, h, d = q.shape
+    blocks = blocks or _fa.DEFAULT_BLOCKS
+    bq, bk = min(blocks[0], l), min(blocks[1], l)
+    mult = max(bq, bk)
+    pad = (-l) % mult
+    def prep(x):
+        x = jnp.moveaxis(x, 2, 1).reshape(b * h, l, d)
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    o = _fa.flash_attention_bhld(
+        prep(q), prep(k), prep(v), scale=d ** -0.5, window=window,
+        l_real=l, blocks=(bq, bk), interpret=interpret)
+    o = o[:, :l].reshape(b, h, l, d)
+    return jnp.moveaxis(o, 1, 2)
+
+
+def flash_attention_ref(q, k, v, window=None):
+    """Full-softmax oracle for the flash kernel (same masks, f32 math)."""
+    b, l, h, d = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    qp = jnp.arange(l)[:, None]
+    kp = jnp.arange(l)[None, :]
+    mask = kp <= qp
+    if window is not None:
+        mask &= kp > (qp - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def _pack_bitmaps(padded: jax.Array, universe: int) -> jax.Array:
+    """(rows, L) int32 element lists (-1 pad) -> (rows, W) uint32 bitmaps.
+
+    Elements within a set are unique, so each (word, bit) target is hit at
+    most once and scatter-add of single-bit values equals scatter-or.
+    """
+    W = max((universe + 31) // 32, 1)
+    rows, L = padded.shape
+    valid = padded >= 0
+    word = jnp.where(valid, padded // 32, 0)
+    bit = jnp.where(valid, padded % 32, 0).astype(jnp.uint32)
+    onehot = jnp.where(valid, jnp.left_shift(jnp.uint32(1), bit), jnp.uint32(0))
+    out = jnp.zeros((rows, W), jnp.uint32)
+    rows_idx = jnp.broadcast_to(jnp.arange(rows)[:, None], (rows, L))
+    return out.at[rows_idx, word].add(onehot)

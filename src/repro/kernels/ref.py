@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas join kernels.
+
+Both kernels compute the same function: given R/S membership bitmaps,
+sizes, per-row column windows and a threshold, return the (m, n) boolean
+matrix of qualifying pairs (Jaccard >= t, column inside the Lemma-3.1
+window). The oracle is the contract the kernels are tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["join_ref", "counts_ref"]
+
+
+def counts_ref(r_bitmaps: jax.Array, s_bitmaps: jax.Array) -> jax.Array:
+    """(m, W) x (n, W) uint32 -> (m, n) int32 intersection sizes."""
+    inter = jnp.bitwise_and(r_bitmaps[:, None, :], s_bitmaps[None, :, :])
+    return jnp.sum(jax.lax.population_count(inter), axis=-1, dtype=jnp.int32)
+
+
+def join_ref(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, t: float):
+    """Oracle for bitmap_join / onehot_join kernels."""
+    counts = counts_ref(r_bitmaps, s_bitmaps)
+    f = counts.astype(jnp.float32)
+    rhs = t * (r_sizes[:, None] + s_sizes[None, :]).astype(jnp.float32)
+    cols = jnp.arange(s_bitmaps.shape[0], dtype=jnp.int32)[None, :]
+    in_window = (cols >= lo[:, None]) & (cols < hi[:, None])
+    return (f * (1.0 + t) >= rhs) & (counts > 0) & in_window

@@ -1,0 +1,224 @@
+"""Compiled-artifact analysis: collective bytes from HLO + roofline terms.
+
+TPU v5e hardware constants (per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI link bandwidth ~50 GB/s
+
+Roofline (EXPERIMENTS.md §Roofline):
+  compute    = HLO_FLOPs(per device) / peak
+  memory     = HLO_bytes(per device) / HBM_bw
+  collective = collective_bytes(per device) / link_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "collective_bytes_from_hlo",
+           "roofline", "model_flops"]
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# definition line:  %name = f32[16,512]{1,0} op(...)   or tuple results
+_DEF_RE = re.compile(r"%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))")
+# collective op line: capture kind + raw operand list
+_OP_RE = re.compile(
+    r"%[\w.\-]+\s*=\s*\S+\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(([^)]*)\)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(text))
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, per kind (per device).
+
+    Optimized-HLO operand lists carry names only, so a first pass builds a
+    symbol table (%name -> result bytes) and collective lines look their
+    operands up there. Inline-shaped operands are handled directly.
+    """
+    symbols: dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        symbols[m.group(1)] = _all_shapes_bytes(m.group(2))
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        kind, phase, operands = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        total = _all_shapes_bytes(operands)  # inline-annotated operands
+        if total == 0:
+            for token in operands.split(","):
+                token = token.strip()
+                if token.startswith("%"):
+                    total += symbols.get(token[1:], 0)
+        out[kind] += total
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: float
+    model_bytes: float = 0.0  # information-theoretic byte floor (decode)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal/bound, where ideal = the better of the two fundamental
+        limits: model FLOPs at peak compute, or model bytes at HBM bw
+        (the relevant floor for decode). 1.0 = at roofline."""
+        ideal = max(self.model_flops / PEAK_FLOPS, self.model_bytes / HBM_BW)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "model_bytes": self.model_bytes,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             coll_bytes_per_dev: float, model_flops_per_dev: float,
+             model_bytes_per_dev: float = 0.0) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_dev / PEAK_FLOPS,
+        memory_s=bytes_per_dev / HBM_BW,
+        collective_s=coll_bytes_per_dev / ICI_BW,
+        flops=flops_per_dev,
+        bytes_accessed=bytes_per_dev,
+        collective_bytes=coll_bytes_per_dev,
+        model_flops=model_flops_per_dev,
+        model_bytes=model_bytes_per_dev,
+    )
+
+
+# ---------------------------------------------------------------------- #
+def _param_count(cfg, active_only: bool) -> float:
+    """Parameters (embedding included once), MoE optionally active-only."""
+    d = cfg.d_model
+    kinds = cfg.layer_kinds()
+    hd = cfg.resolved_head_dim
+    total = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    for kind in kinds:
+        if kind == "attn":
+            attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + \
+                cfg.n_heads * hd * d
+            total += attn
+            if cfg.moe is not None:
+                e_active = cfg.moe.top_k if active_only else cfg.moe.n_experts
+                total += 3 * d * cfg.moe.d_ff_expert * e_active
+                total += 3 * d * cfg.moe.d_ff_shared
+                total += d * cfg.moe.n_experts  # router
+            else:
+                total += 3 * d * cfg.d_ff
+        elif kind == "rec":
+            dr = cfg.rg_lru_dim or d
+            total += 2 * d * dr + 2 * dr * dr + dr * d + 3 * d * cfg.d_ff
+        elif kind == "mlstm":
+            du = 2 * d
+            total += 2 * d * du + 3 * du * du + du * d
+        elif kind == "slstm":
+            total += d * 4 * d + d * d + d * d  # gates + rec + out
+    return float(total)
+
+
+def model_flops(cfg, shape, per_device_chips: int = 1) -> float:
+    """MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·tokens for a decode/prefill forward. Global, then /chips."""
+    n_active = _param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        fl = 6.0 * n_active * toks
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        fl = 2.0 * n_active * toks
+    else:  # decode: one token per stream
+        toks = shape.global_batch
+        fl = 2.0 * n_active * toks
+    return fl / per_device_chips
+
+
+def model_bytes(cfg, shape, model=None, per_device_chips: int = 1) -> float:
+    """Information-theoretic HBM byte floor per step (global, then /chips).
+
+    decode: every live parameter is read once (with >=128 concurrent
+    streams, MoE experts are all touched) + the KV cache / recurrent state
+    is read once and the new slice written. train/prefill: params + one
+    read/write of the residual stream (compute-dominated; the floor only
+    matters when it exceeds the FLOP term).
+    """
+    n_params = _param_count(cfg, active_only=False)
+    p_bytes = 2.0 * n_params  # bf16
+    d = cfg.d_model
+    kinds = cfg.layer_kinds()
+    hd = cfg.resolved_head_dim
+    kvc = model.dims.n_kv_cache if model is not None else cfg.n_kv_heads
+    state_bytes = 0.0
+    if shape.kind == "decode":
+        lc = min(cfg.window, shape.seq_len) if cfg.window else shape.seq_len
+        for kind in kinds:
+            if kind == "attn":
+                state_bytes += shape.global_batch * lc * kvc * hd * 2 * 2
+            elif kind == "rec":
+                dr = cfg.rg_lru_dim or d
+                state_bytes += shape.global_batch * dr * 4 * 2
+            elif kind == "mlstm":
+                du = 2 * d
+                state_bytes += shape.global_batch * du * du // cfg.n_heads * 4 * 2
+            elif kind == "slstm":
+                state_bytes += shape.global_batch * d * 4 * 4 * 2
+        total = p_bytes + state_bytes
+    else:
+        toks = shape.global_batch * shape.seq_len
+        total = p_bytes + 2.0 * toks * d * 2
+    return total / per_device_chips

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax-importing statement: jax pins the
+device count at first init, and the production meshes need 512 host
+placeholder devices (16x16 single pod, 2x16x16 two pods).
+
+Per cell this driver:
+  1. builds the model at TP = mesh 'model' size, abstract params/optimizer
+     with NamedShardings (no allocation — ShapeDtypeStructs only),
+  2. jit(step).lower(...).compile() and records memory_analysis() (fits?)
+     + cost_analysis() (FLOPs/bytes for §Roofline),
+  3. parses the optimized HLO for collective operand bytes,
+  4. optionally re-lowers with layers unrolled (``--unrolled``) so scan
+     trip counts don't under-report per-layer FLOPs/collectives — the
+     numbers §Roofline uses.
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>[__unrolled].json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--unrolled]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, get_config
+from repro.configs.base import SHAPES
+from repro.launch.analysis import (collective_bytes_from_hlo, model_bytes,
+                                   model_flops, roofline)
+from repro.launch.mesh import make_production_mesh
+from repro.models.params import abstract_params
+from repro.models.transformer import build
+from repro.sharding.rules import Rules, logical_to_spec
+from repro.train.optimizer import AdamWConfig, adamw_init, zero1_shardings
+from repro.train.trainer import make_serve_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §6)
+LONG_OK = {"starcoder2-3b", "xlstm-350m", "recurrentgemma-2b"}
+
+
+def default_microbatches(cfg, shape) -> int:
+    """Gradient-accumulation factor so train_4k activations fit 16 GB.
+
+    §Perf iteration L2: per-µb activation memory is linear in seqs/device;
+    mb=16 (1 seq/device/µb at global batch 256 over data=16) halves the
+    old defaults' footprint for the big archs (granite 28.5 -> 12.7 GiB).
+    mb=32 would break batch/data divisibility (8 % 16 != 0) — rejected.
+    """
+    if shape.kind != "train":
+        return 1
+    return 16
+
+
+def batch_spec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_sds(shape, dtype, mesh, rules):
+    """ShapeDtypeStruct with ('batch', None, ...) logical sharding and
+    divisibility fallback (batch=1 long-context cells replicate)."""
+    logical = ("batch",) + (None,) * (len(shape) - 1)
+    spec = logical_to_spec(mesh, rules, logical, shape)
+    return _sds(shape, dtype, mesh, spec)
+
+
+def lower_with_mesh(mesh, jitted, *args, **kw):
+    """Trace under an ambient mesh so bare-PartitionSpec sharding
+    constraints (e.g. the MoE capacity buffer) resolve."""
+    with mesh:
+        return jitted.lower(*args, **kw)
+
+
+def abstract_decode_state(model, batch, seq_len, mesh, rules):
+    """eval_shape of init_decode_state + path-derived shardings."""
+    state = jax.eval_shape(
+        lambda: model.init_decode_state(batch, seq_len))
+
+    bspec = batch_spec(mesh)
+    b_axes = bspec[0] if bspec else None
+
+    def assign(path, s):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "attn" in keys:  # (nL, B, Lc, KVC, D)
+            logical = (None, "batch", None, "kv_heads", None)
+        elif "rec" in keys:
+            logical = (None, "batch", "state") if len(s.shape) == 3 else \
+                (None, "batch", None, "state")
+        elif "mlstm" in keys:
+            if len(s.shape) == 5:       # C (nL,B,H,dk,dv)
+                logical = (None, "batch", None, None, "state")
+            elif len(s.shape) == 4:     # n (nL,B,H,dk)
+                logical = (None, "batch", None, "state")
+            else:                       # m (nL,B,H)
+                logical = (None, "batch", None)
+        elif "slstm" in keys:           # (nL,B,d)
+            logical = (None, "batch", "state")
+        else:
+            logical = (None,) * len(s.shape)
+        spec = logical_to_spec(mesh, rules, logical, s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(assign, state)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               unrolled: bool = False, microbatches: int | None = None,
+               remat: str | None = None) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = get_config(arch)
+    overrides = {}
+    if unrolled:
+        overrides["scan_layers"] = False
+    if remat is not None:
+        overrides["remat"] = remat
+    elif shape.kind == "train":
+        overrides["remat"] = "full"
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build(cfg, tp=mesh.shape["model"])
+    rules = Rules.default(fsdp=cfg.fsdp)
+    mb = microbatches if microbatches is not None else default_microbatches(cfg, shape)
+
+    pabs = abstract_params(model.param_specs(), mesh, rules)
+    bspec = batch_spec(mesh)
+    bax = bspec  # P over batch dim only
+
+    B, L = shape.global_batch, shape.seq_len
+    n_front = cfg.n_frontend_tokens if cfg.frontend == "vision" else 0
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, pabs)
+        zsh = zero1_shardings(pabs, mesh)
+        opt_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            opt_abs, zsh)
+        batch = {
+            "tokens": batch_sds((B, L - n_front), jnp.int32, mesh, rules),
+            "labels": batch_sds((B, L - n_front), jnp.int32, mesh, rules),
+        }
+        if n_front:
+            batch["extra_embeds"] = batch_sds((B, n_front, cfg.d_model),
+                                              jnp.bfloat16, mesh, rules)
+        step = make_train_step(model, AdamWConfig(), microbatches=mb)
+        lowered = lower_with_mesh(mesh, jax.jit(step), {"params": pabs, "opt": opt_abs}, batch)
+    elif shape.kind == "prefill":
+        tokens = batch_sds((B, L - n_front), jnp.int32, mesh, rules)
+        args = [pabs, tokens]
+        kw = {}
+        if n_front:
+            kw["extra_embeds"] = batch_sds((B, n_front, cfg.d_model),
+                                           jnp.bfloat16, mesh, rules)
+        fn = lambda p, t, **k: model.prefill(p, t, cache_len=L, **k)
+        lowered = lower_with_mesh(mesh, jax.jit(fn), *args, **kw)
+    else:  # decode
+        token = batch_sds((B, 1), jnp.int32, mesh, rules)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        state = abstract_decode_state(model, B, L, mesh, rules)
+        step = make_serve_step(model)
+        lowered = lower_with_mesh(mesh, jax.jit(step, donate_argnums=(3,)),
+            pabs, token, pos, state)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    mf = model_flops(cfg, shape, per_device_chips=chips)
+    mb_floor = model_bytes(cfg, shape, model, per_device_chips=chips)
+    rf = roofline(float(ca.get("flops", 0.0)),
+                  float(ca.get("bytes accessed", 0.0)),
+                  float(coll["total"]), mf, mb_floor)
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "unrolled": unrolled,
+        "microbatches": mb,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_hbm_estimate": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {"flops": ca.get("flops"), "bytes": ca.get("bytes accessed")},
+        "collectives": {k: v for k, v in coll.items() if k != "counts"},
+        "collective_counts": coll["counts"],
+        "roofline": rf.to_dict(),
+    }
+
+
+def cells(multi_pod: bool):
+    for arch in ALIASES:
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and arch not in LONG_OK:
+                continue
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unrolled", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--remat")
+    ap.add_argument("--out-dir", default=RESULTS_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    todo = list(cells(args.multi_pod)) if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape_name in todo:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if args.multi_pod else '16x16'}"
+        if args.unrolled:
+            tag += "__unrolled"
+        out_path = os.path.join(args.out_dir, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[cell] {tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape_name, args.multi_pod,
+                             unrolled=args.unrolled,
+                             microbatches=args.microbatches,
+                             remat=args.remat)
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(f"  ok lower={res['lower_s']}s compile={res['compile_s']}s "
+                  f"dominant={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                  f"hbm={res['memory']['peak_hbm_estimate']/2**30:.2f}GiB",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"  FAILED {tag}\n{traceback.format_exc()}", flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production meshes. Import-safe: nothing here touches jax device state
+until the factory is called (the dry-run sets XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None):
+    """Small mesh over whatever local devices exist (tests, benches)."""
+    n = data or jax.device_count()
+    return jax.make_mesh((n,), ("data",))

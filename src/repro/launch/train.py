@@ -1,0 +1,81 @@
+"""Production training driver.
+
+On a real TPU cluster this runs under the production mesh with the full
+config; on this CPU container use ``--smoke`` (reduced config, host mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b --smoke \
+      --steps 20 --ckpt-dir /tmp/run1
+Restarts resume automatically from the newest checkpoint (fault tolerance:
+kill it mid-run and re-invoke).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synth import TokenStream
+from repro.models.transformer import build
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import resume
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, remat="none")
+    model = build(cfg, tp=1)
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=17)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      microbatches=args.microbatches))
+    mgr = CheckpointManager(args.ckpt_dir, keep=3,
+                            async_save=True) if args.ckpt_dir else None
+
+    state, start = (None, 0)
+    if mgr is not None:
+        abstract = jax.eval_shape(lambda: init_train_state(
+            model, jax.random.key(17)))
+        state, start = resume(mgr, abstract)
+        if state is not None:
+            print(f"resumed from checkpoint at step {start}")
+    if state is None:
+        state = init_train_state(model, jax.random.key(17))
+
+    def log_straggler(step, dt, med):
+        print(f"[straggler] step {step}: {dt:.2f}s vs median {med:.2f}s")
+
+    trainer = Trainer(step_fn, stream.batch_at, mgr,
+                      checkpoint_every=args.ckpt_every,
+                      on_straggler=log_straggler)
+    t0 = time.time()
+    state, metrics, step = trainer.run(state, start, args.steps - start)
+    if mgr:
+        mgr.wait()
+    dt = time.time() - t0
+    print(f"step={step} loss={float(metrics['loss']):.4f} "
+          f"({dt / max(step - start, 1):.2f}s/step)")
+
+
+if __name__ == "__main__":
+    main()

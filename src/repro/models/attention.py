@@ -1,0 +1,243 @@
+"""GQA attention: chunked-causal prefill/train, KV-cache decode, windows.
+
+TP-awareness (DESIGN.md §4):
+  * query heads are zero-masked-padded to a multiple of the ``model`` axis
+    (``AttnDims.n_heads_p``); padded heads are exact no-ops (their attention
+    output is masked before the out-projection), the wasted FLOPs show up in
+    the roofline useful-ratio.
+  * KV heads with ``kv % tp != 0`` are replicated (rules fallback); the
+    decode cache stores KV repeated to ``n_kv_cache`` heads
+    (repeat-interleave, Megatron-style) so decode attention is
+    collective-free. Group wiring is defined on the padded head count.
+
+Prefill/train attention is row-chunked ("lazy flash"): a lax.map over query
+chunks bounds live score memory to (B, H, chunk, Lkv) — and for windowed
+attention each chunk only slices the (window + chunk) KV band, making
+sliding-window archs sub-quadratic in compute, not just memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rope
+from .params import Spec
+
+__all__ = ["AttnDims", "attn_specs", "attention", "decode_attention",
+           "init_cache", "make_dims"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int        # real query heads
+    n_heads_p: int      # padded to a multiple of tp
+    n_kv: int           # real kv heads
+    n_kv_cache: int     # kv heads stored in the decode cache
+    head_dim: int
+    window: int | None
+
+
+def make_dims(cfg, tp: int = 1) -> AttnDims:
+    from repro.sharding.rules import pad_to_multiple
+    h, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    hp = h if h % tp == 0 else pad_to_multiple(h, tp)
+    if kv % tp == 0:
+        kvc = kv
+    elif tp % kv == 0:
+        kvc = tp              # repeat-interleave to the TP width
+    else:
+        kvc = kv              # replicated fallback
+    return AttnDims(h, hp, kv, kvc, d, cfg.window)
+
+
+# ---------------------------------------------------------------------- #
+def attn_specs(layers: int, d_model: int, dims: AttnDims, qkv_bias: bool) -> dict:
+    hp, kv, d = dims.n_heads_p, dims.n_kv, dims.head_dim
+    sp = {
+        "wq": Spec((layers, d_model, hp, d), ("layers", "embed_fsdp", "heads", "head_dim")),
+        "wk": Spec((layers, d_model, kv, d), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((layers, d_model, kv, d), ("layers", "embed_fsdp", "kv_heads", "head_dim")),
+        "wo": Spec((layers, hp, d, d_model), ("layers", "heads", "head_dim", "embed_fsdp")),
+    }
+    if qkv_bias:
+        sp["bq"] = Spec((layers, hp, d), ("layers", "heads", "head_dim"), init="zeros")
+        sp["bk"] = Spec((layers, kv, d), ("layers", "kv_heads", "head_dim"), init="zeros")
+        sp["bv"] = Spec((layers, kv, d), ("layers", "kv_heads", "head_dim"), init="zeros")
+    return sp
+
+
+def _head_mask(dims: AttnDims, dtype) -> jax.Array:
+    return (jnp.arange(dims.n_heads_p) < dims.n_heads).astype(dtype)[:, None]
+
+
+def _expand_kv(x: jax.Array, n_out: int) -> jax.Array:
+    """(B, L, KV, D) -> (B, L, n_out, D) by repeat-interleave (pure reshape)."""
+    b, l, kv, d = x.shape
+    if kv == n_out:
+        return x
+    assert n_out % kv == 0, (kv, n_out)
+    rep = n_out // kv
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, l, kv, rep, d)).reshape(
+        b, l, n_out, d)
+
+
+def _qkv(p, x, dims: AttnDims, positions, theta):
+    # p holds per-layer (scan-sliced) weights: wq (d, hp, hd) etc.
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------- #
+# train / prefill: row-chunked causal attention
+# ---------------------------------------------------------------------- #
+def _chunk_attend(q_chunk, k, v, pos_q, pos_kv, window, scale):
+    """q_chunk (B,C,H,D) vs k/v (B,Lk,H,D) -> (B,C,H,D)."""
+    scores = jnp.einsum("bchd,blhd->bhcl", q_chunk, k).astype(jnp.float32) * scale
+    causal = pos_kv[None, :] <= pos_q[:, None]
+    if window is not None:
+        causal &= pos_kv[None, :] > (pos_q[:, None] - window)
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    return jnp.einsum("bhcl,blhd->bchd", probs, v)
+
+
+def flash_attention_block(p, x, positions, dims: AttnDims, theta: float,
+                          blocks=None) -> jax.Array:
+    """Full-sequence attention via the Pallas flash kernel (inference/TPU).
+
+    Same contract as ``attention``; HBM score traffic eliminated (see
+    kernels/flash_attention.py)."""
+    from repro.kernels.ops import flash_attention as _flash
+    q, k, v = _qkv(p, x, dims, positions, theta)
+    k = _expand_kv(k, dims.n_heads_p)
+    v = _expand_kv(v, dims.n_heads_p)
+    out = _flash(q, k, v, window=dims.window, blocks=blocks)
+    out = out * _head_mask(dims, out.dtype)
+    return jnp.einsum("blhd,hdk->blk", out, p["wo"])
+
+
+def attention(p, x, positions, dims: AttnDims, theta: float,
+              chunk: int = 512, unroll: bool = False) -> jax.Array:
+    """Causal self-attention over a full sequence (train / prefill).
+
+    ``unroll=True`` replaces the lax.map over query chunks with a Python
+    loop — used by the roofline analysis pass so HLO cost analysis sees
+    every chunk (scan bodies are costed once; see launch/roofline_pass.py).
+    """
+    b, l, _ = x.shape
+    q, k, v = _qkv(p, x, dims, positions, theta)
+    k = _expand_kv(k, dims.n_heads_p)
+    v = _expand_kv(v, dims.n_heads_p)
+    scale = dims.head_dim ** -0.5
+    chunk = min(chunk, l)
+    if l % chunk != 0:
+        chunk = l  # smoke-test sizes: single chunk
+
+    n_chunks = l // chunk
+    w = dims.window
+
+    def one_chunk(c):
+        cs = c * chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, cs, chunk, axis=1)
+        pq = jax.lax.dynamic_slice_in_dim(positions, cs, chunk, axis=0)
+        if w is not None and l > (w + chunk):
+            # banded KV slice: only the (window+chunk) tokens that can attend
+            band = w + chunk
+            ks = jnp.maximum(cs + chunk - band, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k, ks, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ks, band, axis=1)
+            pk = jax.lax.dynamic_slice_in_dim(positions, ks, band, axis=0)
+            return _chunk_attend(qc, kc, vc, pq, pk, w, scale)
+        return _chunk_attend(qc, k, v, pq, positions, w, scale)
+
+    if n_chunks == 1:
+        out = one_chunk(0)
+    elif unroll:
+        out = jnp.concatenate([one_chunk(jnp.int32(c)) for c in range(n_chunks)],
+                              axis=1)
+    else:
+        outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # (N,B,C,H,D)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, l, dims.n_heads_p,
+                                               dims.head_dim)
+    out = out * _head_mask(dims, out.dtype)
+    return jnp.einsum("blhd,hdk->blk", out, p["wo"])
+
+
+def prefill_kv_into_cache(p, x, positions, dims: AttnDims, theta,
+                          cache_k, cache_v):
+    """Write a full prompt's K/V into a (possibly ring) cache.
+
+    x (B, L, d); cache (B, Lc, KVC, D). For ring caches (window), slot s
+    receives the *last* position p < L with p % Lc == s (deterministic
+    gather, no duplicate-scatter ambiguity).
+    """
+    _, k, v = _qkv(p, x, dims, positions, theta)
+    k = _expand_kv(k, dims.n_kv_cache)
+    v = _expand_kv(v, dims.n_kv_cache)
+    b, l, _, _ = k.shape
+    lc = cache_k.shape[1]
+    if l >= lc:
+        slots = jnp.arange(lc)
+        src = slots + lc * ((l - 1 - slots) // lc)        # last pos per slot
+        return jnp.take(k, src, axis=1), jnp.take(v, src, axis=1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, 0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, 0, axis=1)
+    return cache_k, cache_v
+
+
+# ---------------------------------------------------------------------- #
+# decode: single-token step against a (possibly ring) KV cache
+# ---------------------------------------------------------------------- #
+def init_cache(n_layers: int, batch: int, dims: AttnDims, seq_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Cache length = window size for sliding-window archs (ring buffer)."""
+    lc = min(dims.window, seq_len) if dims.window is not None else seq_len
+    shape = (n_layers, batch, lc, dims.n_kv_cache, dims.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def decode_attention(p, x, cache_k, cache_v, pos: jax.Array,
+                     dims: AttnDims, theta: float):
+    """One-token attention. x (B,1,d); cache_{k,v} (B,Lc,KVC,D); pos scalar.
+
+    Returns (out (B,1,d), new_k, new_v).
+    """
+    b = x.shape[0]
+    lc = cache_k.shape[1]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _qkv(p, x, dims, positions, theta)      # q (B,1,HP,D); k/v (B,1,KV,D)
+    k = _expand_kv(k, dims.n_kv_cache)
+    v = _expand_kv(v, dims.n_kv_cache)
+    slot = pos % lc if dims.window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+
+    kx = _expand_kv(cache_k, dims.n_heads_p)          # (B,Lc,HP,D)
+    vx = _expand_kv(cache_v, dims.n_heads_p)
+    scale = dims.head_dim ** -0.5
+    scores = jnp.einsum("bqhd,blhd->bhql", q, kx).astype(jnp.float32) * scale
+    # slot s in a ring of length lc holds absolute position:
+    slots = jnp.arange(lc)
+    if dims.window is not None:
+        wrap = pos - ((pos - slots) % lc)             # latest abs pos at slot
+        valid = (wrap >= 0) & (wrap <= pos) & (wrap > pos - dims.window)
+    else:
+        valid = slots <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhql,blhd->bqhd", probs, vx)
+    out = out * _head_mask(dims, out.dtype)
+    proj = jnp.einsum("bqhd,hdk->bqk", out, p["wo"])
+    return proj, cache_k, cache_v

@@ -1,0 +1,37 @@
+"""Modality frontend STUBS (per assignment spec).
+
+``[audio]`` (musicgen) and ``[vlm]`` (llava-next) entries specify the
+transformer BACKBONE only; the EnCodec / vision-tower frontends are
+replaced by precomputed embeddings supplied through ``input_specs()``:
+
+  * audio: the backbone consumes EnCodec *token ids* directly (vocab 2048),
+    so no extra inputs are needed — the "frontend" is the discrete
+    tokenization itself, assumed precomputed.
+  * vision: ``patch_embeds (B, n_frontend_tokens, d_model)`` float stub,
+    passed as ``extra_embeds`` and linearly projected by ``mm_proj``
+    (the anyres tiling of llava-next determines n_frontend_tokens; we fix
+    the canonical 576-patch base tile + header count).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def frontend_input_specs(cfg, batch: int) -> dict:
+    """Extra abstract inputs for the arch's frontend stub (dry-run)."""
+    if cfg.frontend == "vision":
+        return {
+            "extra_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        }
+    return {}
+
+
+def make_frontend_stub(cfg, batch: int, rng: np.random.Generator) -> dict:
+    """Materialized stub inputs (smoke tests / examples)."""
+    if cfg.frontend == "vision":
+        x = rng.normal(size=(batch, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+        return {"extra_embeds": jnp.asarray(x, jnp.bfloat16)}
+    return {}

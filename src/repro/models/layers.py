@@ -1,0 +1,79 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings (+ logical axes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import Spec
+
+__all__ = ["rms_norm", "rope", "swiglu", "embed_tokens", "unembed",
+           "norm_spec", "mlp_specs", "with_sharding_constraint_logical"]
+
+
+def with_sharding_constraint_logical(x, mesh, rules, axes):
+    """Annotate an activation with logical axes (no-op without a mesh ctx)."""
+    from repro.sharding.rules import logical_to_spec
+    try:
+        spec = logical_to_spec(mesh, rules, axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------- #
+def norm_spec(d_model: int, layers: int | None = None) -> Spec:
+    shape = (d_model,) if layers is None else (layers, d_model)
+    axes = ("embed",) if layers is None else ("layers", "embed")
+    return Spec(shape, axes, init="ones")
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# ---------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., L, H, D); positions: (..., L)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., L, half)
+    cos = jnp.cos(angles)[..., None, :]   # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- #
+def mlp_specs(layers: int, d_model: int, d_ff: int) -> dict:
+    return {
+        "wg": Spec((layers, d_model, d_ff), ("layers", "embed_fsdp", "mlp")),
+        "wu": Spec((layers, d_model, d_ff), ("layers", "embed_fsdp", "mlp")),
+        "wd": Spec((layers, d_ff, d_model), ("layers", "mlp", "embed_fsdp")),
+    }
+
+
+def swiglu(x: jax.Array, wg, wu, wd) -> jax.Array:
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+# ---------------------------------------------------------------------- #
+def embed_tokens(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Gather rows; table may be vocab-sharded (XLA handles the collective)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, head: jax.Array, vocab_size: int) -> jax.Array:
+    """Logits with padded-vocab masking (padded columns -> -inf)."""
+    logits = x @ head
+    vp = head.shape[-1]
+    if vp != vocab_size:
+        mask = jnp.arange(vp) < vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts: top-k router + capacity dispatch/combine, EP-ready.
+
+Dispatch avoids the (tokens, experts, capacity) one-hot blow-up: per-token
+expert slots are computed with a cumsum rank, tokens are scattered into a
+dense (experts, capacity, d) buffer whose expert axis is sharded over the
+``model`` mesh axis (expert parallelism). XLA inserts the token<->expert
+all-to-alls from the sharding annotations. Overflow tokens are dropped
+(standard capacity-factor semantics); a load-balancing aux loss keeps the
+router near-uniform.
+
+qwen2-moe's shared experts are modeled as one always-on dense SwiGLU of
+width ``d_ff_shared`` (= n_shared x per-expert width), mathematically the
+same block-diagonal compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import swiglu
+from .params import Spec
+
+__all__ = ["moe_specs", "moe_block", "pad_experts"]
+
+
+def _constrain(x, spec: P):
+    """Sharding constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def pad_experts(n_experts: int, tp: int) -> int:
+    from repro.sharding.rules import pad_to_multiple
+    return n_experts if n_experts % tp == 0 else pad_to_multiple(n_experts, tp)
+
+
+def moe_specs(layers: int, d_model: int, moe, tp: int) -> dict:
+    e = pad_experts(moe.n_experts, tp)
+    ff = moe.d_ff_expert
+    sp = {
+        "router": Spec((layers, d_model, e), ("layers", "embed", "experts")),
+        "we_g": Spec((layers, e, d_model, ff),
+                     ("layers", "experts", "embed_fsdp", "expert_mlp")),
+        "we_u": Spec((layers, e, d_model, ff),
+                     ("layers", "experts", "embed_fsdp", "expert_mlp")),
+        "we_d": Spec((layers, e, ff, d_model),
+                     ("layers", "experts", "expert_mlp", "embed_fsdp")),
+    }
+    if moe.d_ff_shared:
+        sp["ws_g"] = Spec((layers, d_model, moe.d_ff_shared),
+                          ("layers", "embed_fsdp", "mlp"))
+        sp["ws_u"] = Spec((layers, d_model, moe.d_ff_shared),
+                          ("layers", "embed_fsdp", "mlp"))
+        sp["ws_d"] = Spec((layers, moe.d_ff_shared, d_model),
+                          ("layers", "mlp", "embed_fsdp"))
+    return sp
+
+
+def moe_block(p, x: jax.Array, moe, n_experts_padded: int):
+    """x (B, L, d) -> (out (B, L, d), aux_loss scalar)."""
+    b, l, d = x.shape
+    tkns = b * l
+    e, k = n_experts_padded, moe.top_k
+    xt = x.reshape(tkns, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    if e != moe.n_experts:  # mask padded experts out of routing
+        logits = jnp.where(jnp.arange(e) < moe.n_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                   # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)   # renormalize
+
+    # aux load-balance loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), 0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * router_mean) * e * moe.aux_loss_weight
+
+    capacity = max(int(moe.capacity_factor * tkns * k / e), 1)
+
+    # slot ranks: position of each (token, choice) within its expert queue
+    flat_e = top_e.reshape(-1)                               # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)      # (T*k, E)
+    ranks = (jnp.cumsum(onehot, axis=0) - onehot) * onehot   # rank within expert
+    rank = jnp.sum(ranks, axis=-1)                           # (T*k,)
+    keep = rank < capacity
+
+    # scatter tokens into the expert buffer (E, C, d).
+    # KNOWN INEFFICIENCY (§Perf L6, measured): ranks/capacity are computed
+    # globally, so the C dim cannot shard over 'data' without XLA
+    # re-gathering around the scatter (a bare sharding constraint was
+    # tried and made the memory term worse, 13 s -> 45 s). The fix is
+    # grouped dispatch — per-data-shard ranks and capacity, buffer
+    # (E, G, C/G, d) with G on 'data' — recorded as the next iteration.
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0)                          # (T*k, d)
+    idx_e = jnp.where(keep, flat_e, 0)
+    idx_c = jnp.where(keep, rank, 0)
+    src = jnp.where(keep[:, None], src, 0)
+    buf = buf.at[idx_e, idx_c].add(src)
+
+    # expert compute (vmapped over experts; expert axis sharded -> EP)
+    def expert_fwd(xb, wg, wu, wd):
+        return swiglu(xb, wg, wu, wd)
+    out_buf = jax.vmap(expert_fwd)(buf, p["we_g"], p["we_u"], p["we_d"])
+
+    # gather back + weight
+    gathered = out_buf[idx_e, idx_c]                         # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weights = top_w.reshape(-1)[:, None].astype(x.dtype)
+    combined = (gathered * weights).reshape(tkns, k, d).sum(axis=1)
+    out = combined.reshape(b, l, d)
+
+    if "ws_g" in p:  # shared experts (always on)
+        out = out + swiglu(xt, p["ws_g"], p["ws_u"], p["ws_d"]).reshape(b, l, d)
+    return out, aux

@@ -1,0 +1,65 @@
+"""Parameter specs: one source of truth for shapes, logical axes and init.
+
+``param_specs(cfg, tp)`` (in transformer.py) returns a pytree of ``Spec``;
+from it we derive
+  * ``init_params``      — materialized arrays (smoke tests, real training)
+  * ``abstract_params``  — ShapeDtypeStructs with NamedShardings (dry-run)
+so the dry-run can lower/compile the full 42B configs without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import Rules, named_sharding
+
+__all__ = ["Spec", "init_params", "abstract_params", "spec_tree_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple
+    axes: tuple              # logical axis names (len == ndim)
+    init: str = "normal"     # 'normal' | 'zeros' | 'ones'
+    scale: float | None = None  # None -> 1/sqrt(fan_in = shape[-2] or [-1])
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(specs, rng: jax.Array, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            scale = s.scale if s.scale is not None else 1.0 / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * scale
+                        ).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, mesh, rules: Rules, dtype=jnp.bfloat16,
+                    strict: bool = False):
+    def to_struct(s: Spec):
+        sh = named_sharding(mesh, rules, s.axes, s.shape, strict=strict)
+        return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh)
+    return jax.tree.map(to_struct, specs, is_leaf=_is_spec)
+
+
+def spec_tree_bytes(specs, bytes_per_el: int = 2) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * bytes_per_el for s in leaves)

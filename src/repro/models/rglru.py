@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence is diagonal with input-dependent decay:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Diagonal + associative -> ``jax.lax.associative_scan`` over time (log-depth,
+TPU-friendly), O(d) state per stream — this is what makes ``long_500k``
+decoding feasible for the hybrid arch. The block wraps the recurrence with
+the Griffin layout: GeLU gate branch x (linear -> causal conv1d -> RG-LRU),
+then a down-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .params import Spec
+
+__all__ = ["rglru_specs", "rglru_block", "rglru_decode_step",
+           "init_rglru_state", "C_SCALE"]
+
+C_SCALE = 8.0
+
+
+def rglru_specs(layers: int, d: int, d_rnn: int, conv_w: int) -> dict:
+    return {
+        "w_gate": Spec((layers, d, d_rnn), ("layers", "embed", "state")),
+        "w_x": Spec((layers, d, d_rnn), ("layers", "embed", "state")),
+        "conv_k": Spec((layers, conv_w, d_rnn), ("layers", None, "state"),
+                       init="normal", scale=0.5),
+        "conv_b": Spec((layers, d_rnn), ("layers", "state"), init="zeros"),
+        "w_a": Spec((layers, d_rnn, d_rnn), ("layers", "state", "state")),
+        "b_a": Spec((layers, d_rnn), ("layers", "state"), init="zeros"),
+        "w_i": Spec((layers, d_rnn, d_rnn), ("layers", "state", "state")),
+        "b_i": Spec((layers, d_rnn), ("layers", "state"), init="zeros"),
+        "lam": Spec((layers, d_rnn), ("layers", "state"), init="ones"),
+        "w_down": Spec((layers, d_rnn, d), ("layers", "state", "embed")),
+        "norm_in": Spec((layers, d), ("layers", "embed"), init="ones"),
+    }
+
+
+def init_rglru_state(batch: int, d_rnn: int, conv_w: int):
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_w - 1, d_rnn), jnp.float32),
+    }
+
+
+def _causal_conv(x, kernel, bias, history=None):
+    """Depthwise causal conv1d. x (B,L,C); kernel (W,C)."""
+    w = kernel.shape[0]
+    if history is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    else:
+        pad = history.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, L+W-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i] for i in range(w))
+    new_hist = xp[:, -(w - 1):, :] if w > 1 else pad[:, :0]
+    return out + bias, new_hist
+
+
+def _rglru_scan(xc, a_log):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1."""
+    a = jnp.exp(a_log)                                   # (B,L,C)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * a_log), 1e-12)) * xc
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return hh, aa
+
+
+def rglru_block(p, x, conv_w: int, eps: float, state=None):
+    """x (B,L,d) -> (out, state)."""
+    B, L, d = x.shape
+    xn = rms_norm(x, p["norm_in"], eps)
+    gate = jax.nn.gelu(xn @ p["w_gate"])                 # (B,L,dr)
+    xr = xn @ p["w_x"]
+    hist = state["conv"] if state is not None else None
+    xc, new_hist = _causal_conv(xr, p["conv_k"], p["conv_b"], hist)
+    xcf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid((xcf @ p["w_a"].astype(jnp.float32)) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid((xcf @ p["w_i"].astype(jnp.float32)) + p["b_i"].astype(jnp.float32))
+    a_log = -C_SCALE * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    xin = i * xcf
+    if state is not None and L == 1:
+        a = jnp.exp(a_log[:, 0])
+        h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * xin[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        h0 = state["h"] if state is not None else jnp.zeros((B, xr.shape[-1]), jnp.float32)
+        # fold initial state into the scan via a virtual first step
+        hs, aa = _rglru_scan(xin, a_log)
+        hs = hs + aa * h0[:, None, :]
+        new_h = hs[:, -1]
+    out = (gate * hs.astype(x.dtype)) @ p["w_down"]
+    new_state = {"h": new_h, "conv": new_hist.astype(jnp.float32)}
+    return x + out, new_state
+
+
+def rglru_decode_step(p, x, conv_w: int, eps: float, state):
+    return rglru_block(p, x, conv_w, eps, state)

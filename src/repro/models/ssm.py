@@ -1,0 +1,270 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM (matrix memory, no hidden-state feedback into gates) admits a
+TPU-friendly chunkwise formulation: within a chunk all positions are
+computed with dense matmuls (intra-chunk decay matrix), and a lax.scan
+carries the (C, n, m) state across chunks. Exponential gating is
+stabilized in log space; the running max ``m`` keeps everything finite —
+cummax/cumsum make the stabilizer itself parallel.
+
+sLSTM has recurrent gate connections (gates read h_{t-1}), so it is
+inherently sequential: a per-token lax.scan. Its state is O(d) per step,
+which is what makes the ``long_500k`` decode shape runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+from .params import Spec
+
+__all__ = ["mlstm_specs", "slstm_specs", "mlstm_block", "slstm_block",
+           "mlstm_cell_ref", "mlstm_decode_step", "slstm_decode_step",
+           "init_mlstm_state", "init_slstm_state"]
+
+UP = 2  # mLSTM up-projection factor
+
+
+# ---------------------------------------------------------------------- #
+# parameter specs
+# ---------------------------------------------------------------------- #
+def mlstm_specs(layers: int, d: int, heads: int) -> dict:
+    du = UP * d
+    return {
+        "w_up": Spec((layers, d, du), ("layers", "embed", "state")),
+        "w_gate": Spec((layers, d, du), ("layers", "embed", "state")),
+        "wq": Spec((layers, du, du), ("layers", "state", "state")),
+        "wk": Spec((layers, du, du), ("layers", "state", "state")),
+        "wv": Spec((layers, du, du), ("layers", "state", "state")),
+        "w_if": Spec((layers, du, 2 * heads), ("layers", "state", None)),
+        "b_if": Spec((layers, 2 * heads), ("layers", None), init="zeros"),
+        "w_down": Spec((layers, du, d), ("layers", "state", "embed")),
+        "norm_in": Spec((layers, d), ("layers", "embed"), init="ones"),
+        "norm_h": Spec((layers, du), ("layers", "state"), init="ones"),
+    }
+
+
+def slstm_specs(layers: int, d: int, heads: int) -> dict:
+    hd = d // heads
+    return {
+        "w_gates": Spec((layers, d, 4 * d), ("layers", "embed", "state")),
+        "r_gates": Spec((layers, heads, hd, 4 * hd), ("layers", None, None, None)),
+        "b_gates": Spec((layers, 4 * d), ("layers", "state"), init="zeros"),
+        "w_out": Spec((layers, d, d), ("layers", "embed", "embed")),
+        "norm_in": Spec((layers, d), ("layers", "embed"), init="ones"),
+        "norm_h": Spec((layers, d), ("layers", "embed"), init="ones"),
+    }
+
+
+# ---------------------------------------------------------------------- #
+# mLSTM cell — chunkwise parallel
+# ---------------------------------------------------------------------- #
+def init_mlstm_state(batch: int, heads: int, dk: int, dv: int):
+    return {
+        "C": jnp.zeros((batch, heads, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, heads, dk), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk(state, qkv):
+    """One chunk. q,k,v (B,K,H,d*); it,ft (B,K,H) raw gate preacts."""
+    q, k, v, it, ft = qkv
+    B, K, H, dk = q.shape
+    lf = jax.nn.log_sigmoid(ft.astype(jnp.float32))          # (B,K,H)
+    F = jnp.cumsum(lf, axis=1)                               # inclusive
+    a = it.astype(jnp.float32) - F                           # i_t - F_t
+    m_in, C_in, n_in = state["m"], state["C"], state["n"]
+    run_max = jax.lax.cummax(a, axis=1)
+    m = F + jnp.maximum(m_in[:, None], run_max)              # (B,K,H) stabilizer
+    # intra-chunk decay matrix W[j, tau] = exp(F_j - F_tau + i_tau - m_j)
+    expo = F[:, :, None] - F[:, None, :] + it.astype(jnp.float32)[:, None, :] \
+        - m[:, :, None]                                      # (B,K,K,H)
+    causal = jnp.tril(jnp.ones((K, K), bool))
+    W = jnp.where(causal[None, :, :, None], jnp.exp(expo), 0.0)
+    qf = q.astype(jnp.float32) * (dk ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    scores = jnp.einsum("bjhd,bthd->bjth", qf, kf) * W       # (B,K,K,H)
+    num_intra = jnp.einsum("bjth,bthv->bjhv", scores, vf)
+    # inter-chunk (state) contribution
+    inter_w = jnp.exp(F + m_in[:, None] - m)                 # (B,K,H)
+    num_inter = jnp.einsum("bjhd,bhdv->bjhv", qf, C_in) * inter_w[..., None]
+    den_inter = jnp.einsum("bjhd,bhd->bjh", qf, n_in) * inter_w
+    num = num_intra + num_inter                              # (B,K,H,dv)
+    den = jnp.einsum("bjth,bthd->bjhd", W, kf)
+    den_dot = jnp.einsum("bjhd,bjhd->bjh", qf, den) + den_inter
+    h = num / jnp.maximum(jnp.abs(den_dot), jnp.exp(-m))[..., None]
+    # carry update (exponents relative to m_out = m at last position)
+    F_tot = F[:, -1][:, None]                                # (B,1,H)
+    m_out = m[:, -1]
+    w_state = jnp.exp(F_tot - F + it.astype(jnp.float32) - m_out[:, None])
+    C_out = jnp.exp(F_tot[:, 0] + m_in - m_out)[..., None, None] * C_in + \
+        jnp.einsum("bth,bthd,bthv->bhdv", w_state, kf, vf)
+    n_out = jnp.exp(F_tot[:, 0] + m_in - m_out)[..., None] * n_in + \
+        jnp.einsum("bth,bthd->bhd", w_state, kf)
+    return {"C": C_out, "n": n_out, "m": m_out}, h
+
+
+def mlstm_cell(q, k, v, it, ft, state, chunk: int, ckpt_group: int = 4):
+    """q,k,v (B,L,H,d*); it/ft (B,L,H). Returns (h (B,L,H,dv), state).
+
+    The chunk scan's carry is the (B,H,dk,dv) matrix state — saved per
+    chunk for backward. Grouping ``ckpt_group`` chunks under jax.checkpoint
+    keeps only group-boundary states (4x fewer saved carries for the
+    default group; EXPERIMENTS.md §Perf/xlstm)."""
+    B, L, H, dk = q.shape
+    chunk = min(chunk, L)
+    if L % chunk:
+        chunk = L
+    n_chunks = L // chunk
+    if n_chunks == 1:
+        state, h = _mlstm_chunk(state, (q, k, v, it, ft))
+        return h, state
+
+    def body(st, args):
+        st, h = _mlstm_chunk(st, args)
+        return st, h
+
+    split = lambda x: x.reshape(B, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+    xs = tuple(map(split, (q, k, v, it, ft)))
+    if n_chunks % ckpt_group == 0 and n_chunks > ckpt_group:
+        n_groups = n_chunks // ckpt_group
+
+        @jax.checkpoint
+        def group_fn(st, group_xs):
+            return jax.lax.scan(body, st, group_xs)
+
+        regroup = lambda x: x.reshape(n_groups, ckpt_group, *x.shape[1:])
+        state, hs = jax.lax.scan(group_fn, state, tuple(map(regroup, xs)))
+        hs = hs.reshape(n_chunks, *hs.shape[2:])  # (n_chunks, B, chunk, H, dv)
+    else:
+        state, hs = jax.lax.scan(body, state, xs)
+    return hs.swapaxes(0, 1).reshape(B, L, H, -1), state
+
+
+def mlstm_cell_ref(q, k, v, it, ft, state):
+    """Per-token sequential oracle (float32), for tests."""
+    B, L, H, dk = q.shape
+
+    def step(st, args):
+        qt, kt, vt, i_t, f_t = args  # (B,H,*)
+        lf = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+        m_new = jnp.maximum(lf + st["m"], i_t.astype(jnp.float32))
+        fh = jnp.exp(lf + st["m"] - m_new)
+        ih = jnp.exp(i_t.astype(jnp.float32) - m_new)
+        kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+        C = fh[..., None, None] * st["C"] + ih[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])
+        n = fh[..., None] * st["n"] + ih[..., None] * kf
+        qf = qt.astype(jnp.float32) * (dk ** -0.5)
+        num = jnp.einsum("bhd,bhdv->bhv", qf, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return {"C": C, "n": n, "m": m_new}, h
+
+    sw = lambda x: x.swapaxes(0, 1)
+    state, hs = jax.lax.scan(step, state, tuple(map(sw, (q, k, v, it, ft))))
+    return hs.swapaxes(0, 1), state
+
+
+def mlstm_decode_step(q, k, v, it, ft, state):
+    """Single-token step: q,k,v (B,1,H,d); returns (state, h (B,1,H,dv))."""
+    h, st = mlstm_cell_ref(q, k, v, it, ft, state)
+    return st, h
+
+
+# ---------------------------------------------------------------------- #
+# blocks
+# ---------------------------------------------------------------------- #
+def _mlstm_qkvif(p, xn, heads):
+    xu = xn @ p["w_up"]                                   # (B,L,du)
+    B, L, du = xu.shape
+    hd = du // heads
+    split = lambda w: (xu @ w).reshape(B, L, heads, hd)
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    gif = (xu @ p["w_if"]) + p["b_if"]                    # (B,L,2H)
+    it, ft = gif[..., :heads], gif[..., heads:]
+    return xu, q, k, v, it, ft
+
+
+def mlstm_block(p, x, heads: int, eps: float, chunk: int, state=None):
+    xn = rms_norm(x, p["norm_in"], eps)
+    xu, q, k, v, it, ft = _mlstm_qkvif(p, xn, heads)
+    B, L, du = xu.shape
+    if state is None:
+        state = init_mlstm_state(B, heads, du // heads, du // heads)
+    if L == 1:
+        state, h = mlstm_decode_step(q, k, v, it, ft, state)
+    else:
+        h, state = mlstm_cell(q, k, v, it, ft, state, chunk)
+    h = h.reshape(B, L, du).astype(x.dtype)
+    h = rms_norm(h, p["norm_h"], eps)
+    gated = h * jax.nn.silu(xn @ p["w_gate"])
+    return x + gated @ p["w_down"], state
+
+
+def init_slstm_state(batch: int, d: int):
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(p, heads, st, gx_t):
+    """gx_t (B, 4d) input gate preacts; recurrent term added here."""
+    B, d4 = gx_t.shape
+    d = d4 // 4
+    hd = d // heads
+    hprev = st["h"].reshape(B, heads, hd)
+    rec = jnp.einsum("bhd,hdk->bhk", hprev, p["r_gates"]).reshape(B, 4 * d)
+    g = (gx_t + rec).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zt)
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + st["m"], it)
+    fh = jnp.exp(lf + st["m"] - m_new)
+    ih = jnp.exp(it - m_new)
+    c = fh * st["c"] + ih * z
+    n = fh * st["n"] + ih
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_block(p, x, heads: int, eps: float, state=None,
+                time_chunk: int = 256):
+    """sLSTM layer. The token scan is wrapped in time-chunked gradient
+    checkpointing: only chunk-boundary states are saved for backward
+    (L/time_chunk boundaries instead of L per-step states — the fix for
+    the 4096-step activation blow-up, EXPERIMENTS.md §Perf/xlstm)."""
+    B, L, d = x.shape
+    xn = rms_norm(x, p["norm_in"], eps)
+    gx = xn @ p["w_gates"] + p["b_gates"]                # (B,L,4d)
+    if state is None:
+        state = init_slstm_state(B, d)
+
+    def step(st, gx_t):
+        st = _slstm_step(p, heads, st, gx_t)
+        return st, st["h"]
+
+    if L % time_chunk == 0 and L > time_chunk:
+        n_chunks = L // time_chunk
+
+        @jax.checkpoint
+        def chunk_fn(st, gx_chunk):  # (time_chunk, B, 4d)
+            return jax.lax.scan(step, st, gx_chunk)
+
+        gx_t = gx.swapaxes(0, 1).reshape(n_chunks, time_chunk, B, 4 * d)
+        state, hs = jax.lax.scan(chunk_fn, state, gx_t)
+        hs = hs.reshape(L, B, d)
+    else:
+        state, hs = jax.lax.scan(step, state, gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                # (B,L,d)
+    h = rms_norm(h, p["norm_h"], eps)
+    return x + h @ p["w_out"], state
+
+
+def slstm_decode_step(p, x, heads: int, eps: float, state):
+    return slstm_block(p, x, heads, eps, state)

@@ -1,0 +1,338 @@
+"""Model assembly: param specs, train forward, prefill, decode step.
+
+Uniform-stack archs (all dense + MoE transformers) scan over stacked layer
+parameters (compile time O(1) in depth); pattern archs (xLSTM,
+RecurrentGemma) unroll their small layer stacks, slicing per-kind stacked
+parameters statically.
+
+Activation sharding: batch over (pod, data); tensor-parallel einsum
+operands over 'model' via the parameter shardings (XLA SPMD propagates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import Rules, pad_to_multiple
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rg
+from . import ssm
+from .layers import embed_tokens, mlp_specs, rms_norm, swiglu, unembed
+from .params import Spec
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    tp: int
+    dims: attn.AttnDims
+    vocab_p: int
+    n_experts_p: int
+
+    # ---------------------------------------------------------------- #
+    # parameter specs
+    # ---------------------------------------------------------------- #
+    def param_specs(self) -> dict:
+        cfg, dims = self.cfg, self.dims
+        d = cfg.d_model
+        specs: dict = {
+            "embed": Spec((self.vocab_p, d), ("vocab", "embed")),
+            "out_norm": Spec((d,), ("embed",), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = Spec((d, self.vocab_p), ("embed_fsdp", "vocab"))
+        kinds = cfg.layer_kinds()
+        groups: dict = {}
+        for kind in dict.fromkeys(kinds):  # unique, ordered
+            n = sum(1 for k in kinds if k == kind)
+            groups[kind] = self._block_specs(kind, n)
+        specs["blocks"] = groups
+        if cfg.frontend == "vision":
+            # anyres projector stub: projects precomputed patch embeds
+            specs["mm_proj"] = Spec((d, d), ("embed", "embed_fsdp"))
+        return specs
+
+    def _block_specs(self, kind: str, n: int) -> dict:
+        cfg, dims = self.cfg, self.dims
+        d = cfg.d_model
+        if kind == "attn":
+            sp = {
+                "ln1": Spec((n, d), ("layers", "embed"), init="ones"),
+                "attn": attn.attn_specs(n, d, dims, cfg.qkv_bias),
+                "ln2": Spec((n, d), ("layers", "embed"), init="ones"),
+            }
+            if cfg.moe is not None:
+                sp["moe"] = moe_mod.moe_specs(n, d, cfg.moe, self.tp)
+            elif cfg.d_ff:
+                sp["mlp"] = mlp_specs(n, d, cfg.d_ff)
+            return sp
+        if kind == "rec":  # RG-LRU temporal mix + MLP
+            return {
+                "rec": rg.rglru_specs(n, d, cfg.rg_lru_dim or d, cfg.conv1d_width),
+                "ln2": Spec((n, d), ("layers", "embed"), init="ones"),
+                "mlp": mlp_specs(n, d, cfg.d_ff),
+            }
+        if kind == "mlstm":
+            return {"cell": ssm.mlstm_specs(n, d, cfg.n_heads)}
+        if kind == "slstm":
+            return {"cell": ssm.slstm_specs(n, d, cfg.n_heads)}
+        raise ValueError(kind)
+
+    # ---------------------------------------------------------------- #
+    # blocks (single layer, params already sliced)
+    # ---------------------------------------------------------------- #
+    def _apply_block(self, kind, p, h, positions, state=None):
+        """Returns (h, aux, new_state). ``state`` None => train/prefill path
+        keeps internal recurrent state implicit (fresh zeros)."""
+        cfg, dims = self.cfg, self.dims
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "attn":
+            hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            if state is not None and "k" in state:
+                out, ck, cv = attn.decode_attention(
+                    p["attn"], hn, state["k"], state["v"], positions[0],
+                    dims, cfg.rope_theta)
+                state = {"k": ck, "v": cv}
+            elif cfg.attn_impl == "flash":
+                out = attn.flash_attention_block(p["attn"], hn, positions,
+                                                 dims, cfg.rope_theta)
+            else:
+                out = attn.attention(p["attn"], hn, positions, dims,
+                                     cfg.rope_theta, chunk=cfg.attn_chunk,
+                                     unroll=cfg.unroll_attn)
+            h = h + out
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                out, aux = moe_mod.moe_block(p["moe"], hn, cfg.moe, self.n_experts_p)
+            elif cfg.d_ff:
+                out = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+            else:
+                out = jnp.zeros_like(h)
+            return h + out, aux, state
+        if kind == "rec":
+            h, state = rg.rglru_block(p["rec"], h, cfg.conv1d_width,
+                                      cfg.norm_eps, state)
+            hn = rms_norm(h, p["ln2"], cfg.norm_eps)
+            out = swiglu(hn, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+            return h + out, aux, state
+        if kind == "mlstm":
+            h, state = ssm.mlstm_block(p["cell"], h, cfg.n_heads, cfg.norm_eps,
+                                       cfg.mlstm_chunk, state)
+            return h, aux, state
+        if kind == "slstm":
+            h, state = ssm.slstm_block(p["cell"], h, cfg.n_heads, cfg.norm_eps,
+                                       state)
+            return h, aux, state
+        raise ValueError(kind)
+
+    # ---------------------------------------------------------------- #
+    # forward (train / prefill logits over the full sequence)
+    # ---------------------------------------------------------------- #
+    def forward(self, params, tokens, extra_embeds=None):
+        """tokens (B, L) -> (logits (B, L', vocab_p), aux_loss)."""
+        cfg = self.cfg
+        h = embed_tokens(tokens, params["embed"])
+        if extra_embeds is not None:
+            pe = extra_embeds.astype(h.dtype)
+            if "mm_proj" in params:
+                pe = pe @ params["mm_proj"]
+            h = jnp.concatenate([pe, h], axis=1)
+        L = h.shape[1]
+        positions = jnp.arange(L, dtype=jnp.int32)
+        kinds = cfg.layer_kinds()
+        uniform = (len(set(kinds)) == 1 and kinds[0] == "attn"
+                   and cfg.scan_layers)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if uniform:
+            block_params = params["blocks"]["attn"]
+
+            def body(carry, p):
+                hh, auxs = carry
+                hh, aux, _ = self._apply_block("attn", p, hh, positions)
+                return (hh, auxs + aux), None
+
+            body = self._maybe_remat(body)
+            (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), block_params)
+        else:
+            counters: dict = {}
+            for kind in kinds:
+                i = counters.get(kind, 0)
+                counters[kind] = i + 1
+                p = jax.tree.map(lambda a: a[i], params["blocks"][kind])
+                fn = self._maybe_remat(
+                    functools.partial(self._apply_block, kind))
+                h, aux, _ = fn(p, h, positions)
+                aux_total = aux_total + aux
+
+        h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+        head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+        logits = unembed(h, head, cfg.vocab_size)
+        return logits, aux_total
+
+    def _maybe_remat(self, fn):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return fn
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat == "full"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(fn, policy=policy)
+
+    # ---------------------------------------------------------------- #
+    # prefill: full-sequence forward that also populates decode state
+    # ---------------------------------------------------------------- #
+    def prefill(self, params, tokens, cache_len: int, extra_embeds=None,
+                dtype=jnp.bfloat16):
+        """Returns (last-token logits (B, 1, V), decode state at pos=L)."""
+        cfg, dims = self.cfg, self.dims
+        B = tokens.shape[0]
+        state = self.init_decode_state(B, cache_len, dtype)
+        h = embed_tokens(tokens, params["embed"])
+        if extra_embeds is not None:
+            pe = extra_embeds.astype(h.dtype)
+            if "mm_proj" in params:
+                pe = pe @ params["mm_proj"]
+            h = jnp.concatenate([pe, h], axis=1)
+        L = h.shape[1]
+        positions = jnp.arange(L, dtype=jnp.int32)
+        kinds = cfg.layer_kinds()
+        uniform = (len(set(kinds)) == 1 and kinds[0] == "attn"
+                   and cfg.scan_layers)
+
+        if uniform:
+            cache = state["attn"]
+
+            def body(hh, xs):
+                p, ck, cv = xs
+                hn = rms_norm(hh, p["ln1"], cfg.norm_eps)
+                ck, cv = attn.prefill_kv_into_cache(
+                    p["attn"], hn, positions, dims, cfg.rope_theta, ck, cv)
+                hh, _, _ = self._apply_block("attn", p, hh, positions)
+                return hh, (ck, cv)
+
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (params["blocks"]["attn"], cache["k"], cache["v"]))
+            state["attn"] = {"k": ks, "v": vs}
+        else:
+            counters: dict = {}
+            new_sts: dict = {}
+            for kind in kinds:
+                i = counters.get(kind, 0)
+                counters[kind] = i + 1
+                p = jax.tree.map(lambda a: a[i], params["blocks"][kind])
+                if kind == "attn":
+                    hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+                    ck, cv = attn.prefill_kv_into_cache(
+                        p["attn"], hn, positions, dims, cfg.rope_theta,
+                        state["attn"]["k"][i], state["attn"]["v"][i])
+                    h, _, _ = self._apply_block("attn", p, h, positions)
+                    new_sts.setdefault("attn", []).append({"k": ck, "v": cv})
+                else:
+                    # run with the explicit initial state so the final state
+                    # comes back for decoding
+                    fresh = jax.tree.map(lambda a: a[i], state[kind])
+                    h, _, st = self._apply_block(kind, p, h, positions, fresh)
+                    new_sts.setdefault(kind, []).append(st)
+            for kind, sts in new_sts.items():
+                state[kind] = jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
+        h = rms_norm(h[:, -1:], params["out_norm"], cfg.norm_eps)
+        head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+        return unembed(h, head, cfg.vocab_size), state
+
+    # ---------------------------------------------------------------- #
+    # decode
+    # ---------------------------------------------------------------- #
+    def init_decode_state(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        """Stacked per-layer decode state for every layer kind."""
+        cfg, dims = self.cfg, self.dims
+        kinds = cfg.layer_kinds()
+        state: dict = {}
+        n_attn = sum(1 for k in kinds if k == "attn")
+        if n_attn:
+            state["attn"] = attn.init_cache(n_attn, batch, dims, seq_len, dtype)
+        n_rec = sum(1 for k in kinds if k == "rec")
+        if n_rec:
+            dr = cfg.rg_lru_dim or cfg.d_model
+            st = rg.init_rglru_state(batch, dr, cfg.conv1d_width)
+            state["rec"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_rec, *a.shape)), st)
+        n_m = sum(1 for k in kinds if k == "mlstm")
+        if n_m:
+            du = ssm.UP * cfg.d_model
+            hd = du // cfg.n_heads
+            st = ssm.init_mlstm_state(batch, cfg.n_heads, hd, hd)
+            state["mlstm"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_m, *a.shape)), st)
+        n_s = sum(1 for k in kinds if k == "slstm")
+        if n_s:
+            st = ssm.init_slstm_state(batch, cfg.d_model)
+            state["slstm"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_s, *a.shape)), st)
+        return state
+
+    def decode_step(self, params, token, pos, state):
+        """token (B, 1) int32; pos scalar int32. Returns (logits, state)."""
+        cfg, dims = self.cfg, self.dims
+        h = embed_tokens(token, params["embed"])
+        positions = jnp.full((1,), pos, jnp.int32)
+        kinds = cfg.layer_kinds()
+        uniform = (len(set(kinds)) == 1 and kinds[0] == "attn"
+                   and cfg.scan_layers)
+        new_state = dict(state)
+
+        if uniform:
+            block_params = params["blocks"]["attn"]
+            cache = state["attn"]
+
+            def body(hh, xs):
+                p, ck, cv = xs
+                hh, _, st = self._apply_block("attn", p, hh, positions,
+                                              {"k": ck, "v": cv})
+                return hh, (st["k"], st["v"])
+
+            h, (ks, vs) = jax.lax.scan(body, h, (block_params, cache["k"], cache["v"]))
+            new_state["attn"] = {"k": ks, "v": vs}
+        else:
+            counters: dict = {}
+            updated: dict = {k: [] for k in state}
+            for kind in kinds:
+                i = counters.get(kind, 0)
+                counters[kind] = i + 1
+                p = jax.tree.map(lambda a: a[i], params["blocks"][kind])
+                if kind == "attn":
+                    st = {"k": state["attn"]["k"][i], "v": state["attn"]["v"][i]}
+                else:
+                    st = jax.tree.map(lambda a: a[i], state[kind])
+                h, _, st = self._apply_block(kind, p, h, positions, st)
+                updated.setdefault(kind if kind != "attn" else "attn", [])
+                if kind == "attn":
+                    updated["attn"].append(st)
+                else:
+                    updated[kind].append(st)
+            for kind, sts in updated.items():
+                if sts:
+                    new_state[kind] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *sts)
+
+        h = rms_norm(h, params["out_norm"], cfg.norm_eps)
+        head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+        logits = unembed(h, head, cfg.vocab_size)
+        return logits, new_state
+
+
+def build(cfg: ModelConfig, tp: int = 1) -> Model:
+    dims = attn.make_dims(cfg, tp)
+    vocab_p = cfg.vocab_size if cfg.vocab_size % tp == 0 else pad_to_multiple(
+        cfg.vocab_size, tp)
+    n_exp = moe_mod.pad_experts(cfg.moe.n_experts, tp) if cfg.moe else 0
+    return Model(cfg, tp, dims, vocab_p, n_exp)

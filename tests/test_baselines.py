@@ -1,0 +1,56 @@
+"""Baseline (candidate-based) joins must equal the brute-force oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import (allpairs_join, fasttelp_sj, fs_join,
+                                  mr_rp_ppjoin, ppjoin_join)
+from repro.core.join import brute_force_join
+from repro.core.sets import SetCollection
+
+
+def _mk(rng, n, universe=120, max_len=20):
+    return SetCollection.from_ragged(
+        [rng.choice(universe, size=rng.integers(1, max_len), replace=False)
+         for _ in range(n)],
+        universe=universe,
+    )
+
+
+@pytest.mark.parametrize("t", [0.25, 0.5, 0.75, 0.9])
+def test_baselines_exact(t):
+    rng = np.random.default_rng(11)
+    R, S = _mk(rng, 50), _mk(rng, 70)
+    expected = brute_force_join(R, S, t)
+    assert allpairs_join(R, S, t) == expected
+    assert ppjoin_join(R, S, t) == expected
+    assert mr_rp_ppjoin(R, S, t, 4) == expected
+    assert fs_join(R, S, t, 4) == expected
+    assert fasttelp_sj(R, S, t) == expected
+
+
+def test_prefix_filter_prunes():
+    """PPJoin candidates <= AllPairs candidates (that's its whole point)."""
+    rng = np.random.default_rng(5)
+    R, S = _mk(rng, 80), _mk(rng, 80)
+    ap, pp = {}, {}
+    allpairs_join(R, S, 0.8, ap)
+    ppjoin_join(R, S, 0.8, pp)
+    assert pp["candidates"] <= ap["candidates"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.lists(st.lists(st.integers(0, 25), min_size=1, max_size=8),
+               min_size=1, max_size=8),
+    s=st.lists(st.lists(st.integers(0, 25), min_size=1, max_size=8),
+               min_size=1, max_size=8),
+    t=st.sampled_from([0.5, 0.75]),
+)
+def test_baselines_property(r, s, t):
+    R = SetCollection.from_ragged([np.array(x) for x in r], universe=26)
+    S = SetCollection.from_ragged([np.array(x) for x in s], universe=26)
+    expected = brute_force_join(R, S, t)
+    assert ppjoin_join(R, S, t) == expected
+    assert fs_join(R, S, t, 3) == expected
+    assert fasttelp_sj(R, S, t) == expected

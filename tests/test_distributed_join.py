@@ -1,0 +1,144 @@
+"""MR-CF-RS-Join: partitioner DP + routing + sharded reduce correctness."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.partition import hash_partition, load_aware_partition, route
+from repro.core.sets import SetCollection
+
+from tests.test_join_core import paper_collections
+
+
+def _rand(rng, n, universe, max_len):
+    return SetCollection.from_ragged(
+        [rng.choice(universe, size=rng.integers(1, max_len), replace=False)
+         for _ in range(n)],
+        universe=universe,
+    )
+
+
+# ---------------------------------------------------------------------- #
+# partitioner
+# ---------------------------------------------------------------------- #
+def test_partition_covers_and_is_minimax():
+    R, S = paper_collections()
+    part = load_aware_partition(R, S, 0.7, 2)
+    lbs = [iv[0] for iv in part.intervals]
+    rbs = [iv[1] for iv in part.intervals]
+    assert lbs[0] == 1 and rbs[-1] == 5
+    assert all(rbs[i] + 1 == lbs[i + 1] for i in range(len(lbs) - 1))
+    # DP optimality: no single alternative cut gives a lower max shard load
+    from repro.core.partition import _length_histograms, _load
+    Cr, Cs, _ = _length_histograms(R, S)
+    i_arr = np.arange(len(Cr), dtype=np.float64)
+    pre = (np.concatenate([[0.0], np.cumsum(i_arr * Cr)]),
+           np.concatenate([[0.0], np.cumsum(Cs)]),
+           np.concatenate([[0.0], np.cumsum(i_arr * Cs)]))
+    def load(lb, rb):
+        return _load(lb, rb, Cr, Cs, 0.7, *pre)
+    best = min(max(load(1, c), load(c + 1, 5)) for c in range(1, 5))
+    assert part.psi == pytest.approx(best)
+
+
+def test_routing_matches_paper_fig4():
+    """r3 (|R|=3, t=0.7) must be replicated to both shards (paper §4)."""
+    R, S = paper_collections()
+    part = load_aware_partition(R, S, 0.7, 2)
+    s_rows, r_rows, stats = route(R, S, part)
+    # every S set routed exactly once
+    assert sorted(sum(s_rows, [])) == list(range(6))
+    # r3 = row 2 appears in two shards
+    appears = [k for k in range(2) if 2 in r_rows[k]]
+    assert len(appears) == 2
+    assert stats["r_replication"] >= 1.0
+    assert stats["shuffle_bytes"] > 0
+
+
+def test_load_aware_beats_hash_on_skew():
+    """Fig 8 qualitative: load-aware max shard load <= hash replication load."""
+    rng = np.random.default_rng(0)
+    # skewed sizes: many small sets, few huge ones
+    sizes = np.concatenate([rng.integers(1, 5, 400), rng.integers(50, 80, 20)])
+    sets = [rng.choice(500, size=s, replace=False) for s in sizes]
+    R = _rand(rng, 200, 500, 30)
+    S = SetCollection.from_ragged(sets, universe=500)
+    la = load_aware_partition(R, S, 0.5, 8)
+    ha = hash_partition(R, S, 0.5, 8)
+    _, _, la_stats = route(R, S, la)
+    _, _, ha_stats = route(R, S, ha)
+    # hash replicates all of S to every shard -> more shuffle bytes
+    assert la_stats["shuffle_bytes"] < ha_stats["shuffle_bytes"]
+
+
+# ---------------------------------------------------------------------- #
+# distributed join correctness (sequential shard loop)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("strategy", ["load_aware", "hash"])
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+def test_mr_join_matches_bruteforce(strategy, n_shards):
+    rng = np.random.default_rng(n_shards)
+    R = _rand(rng, 60, 200, 25)
+    S = _rand(rng, 80, 200, 25)
+    for t in (0.25, 0.5, 0.75):
+        expected = brute_force_join(R, S, t)
+        stats = {}
+        got = mr_cf_rs_join(R, S, t, n_shards, strategy=strategy, stats=stats)
+        assert got == expected
+        assert stats["n_shards"] <= n_shards
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.lists(st.lists(st.integers(0, 30), min_size=1, max_size=8),
+               min_size=1, max_size=10),
+    s=st.lists(st.lists(st.integers(0, 30), min_size=1, max_size=8),
+               min_size=1, max_size=10),
+    t=st.sampled_from([0.25, 0.5, 0.75]),
+    shards=st.integers(1, 4),
+)
+def test_mr_join_property(r, s, t, shards):
+    R = SetCollection.from_ragged([np.array(x) for x in r], universe=31)
+    S = SetCollection.from_ragged([np.array(x) for x in s], universe=31)
+    assert mr_cf_rs_join(R, S, t, shards) == brute_force_join(R, S, t)
+
+
+# ---------------------------------------------------------------------- #
+# real multi-device shard_map (subprocess: needs its own XLA device count)
+# ---------------------------------------------------------------------- #
+_SHARD_MAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.sets import SetCollection
+
+assert jax.device_count() == 8
+rng = np.random.default_rng(1)
+mk = lambda n: SetCollection.from_ragged(
+    [rng.choice(300, size=rng.integers(1, 40), replace=False) for _ in range(n)],
+    universe=300)
+R, S = mk(100), mk(120)
+mesh = jax.make_mesh((8,), ("data",))
+for t in (0.4, 0.8):
+    got = mr_cf_rs_join(R, S, t, 8, mesh=mesh)
+    assert got == brute_force_join(R, S, t), t
+print("SHARD_MAP_OK")
+"""
+
+
+def test_mr_join_shard_map_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _SHARD_MAP_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARD_MAP_OK" in out.stdout

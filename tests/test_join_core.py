@@ -1,0 +1,135 @@
+"""Core join correctness: paper worked example + oracle equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fvt import FVT, LFVT, build_seqs
+from repro.core.join import brute_force_join, cf_rs_join_fvt, cf_rs_join_lfvt
+from repro.core.sets import SetCollection, jaccard, length_filter_bounds
+from repro.core.tile_join import cf_rs_join_device, window_bounds
+
+# ---------------------------------------------------------------------- #
+# the paper's Fig. 2 sample collections (a1..a5 -> 0..4, r1.. -> 0.., s1.. -> 0..)
+# ---------------------------------------------------------------------- #
+R_PAPER = [[0, 1, 2, 3, 4], [0, 1], [0, 1, 2], [0, 2]]
+S_PAPER = [[0, 1, 2, 3, 4], [0, 1, 2, 3, 4], [0, 1, 2], [0, 3], [0, 2, 4], [4]]
+
+
+def paper_collections():
+    R = SetCollection.from_ragged([np.array(x) for x in R_PAPER], universe=5)
+    S = SetCollection.from_ragged([np.array(x) for x in S_PAPER], universe=5)
+    return R, S
+
+
+def test_seq_reorganization_matches_fig2c():
+    _, S = paper_collections()
+    seqs = build_seqs(S)
+    assert seqs[0] == [(0, 5), (1, 5), (2, 3), (4, 3), (3, 2)]   # seq(a1)
+    assert seqs[1] == [(0, 5), (1, 5), (2, 3)]                   # seq(a2)
+    assert seqs[2] == [(0, 5), (1, 5), (2, 3), (4, 3)]           # seq(a3)
+    assert seqs[3] == [(0, 5), (1, 5), (3, 2)]                   # seq(a4)
+    assert seqs[4] == [(0, 5), (1, 5), (4, 3), (5, 1)]           # seq(a5)
+
+
+def test_fvt_structure_matches_fig2d():
+    _, S = paper_collections()
+    tree = FVT(S)
+    # paper: "the constructed FVT has 9 nodes" (counting the root; 8 + root)
+    assert tree.n_nodes == 8
+    assert set(tree.element_table) == {0, 1, 2, 3, 4}
+    # L(a3) points at the node for s5 (id 4), depth 4
+    depth, node = tree.element_table[2]
+    assert depth == 4 and node.set_id == 4
+    # walk from L(a1) hits seq(a1) reversed
+    assert list(tree.walk(0)) == [(3, 2), (4, 3), (2, 3), (1, 5), (0, 5)]
+
+
+def test_lfvt_structure_matches_fig3d():
+    _, S = paper_collections()
+    tree = LFVT(S)
+    # paper Fig 3d: 4 compressed nodes (root excluded)
+    assert tree.n_nodes == 4
+    # walks must enumerate seq(a) reversed, same as the FVT
+    fvt = FVT(S)
+    for a in range(5):
+        assert list(tree.walk(a)) == list(fvt.walk(a))
+
+
+def test_paper_worked_example_r4():
+    """Paper §3.1.2: r4={a1,a3}, t=0.6 -> f_{4,4}=1, f_{4,5}=2, f_{4,3}=2."""
+    R, S = paper_collections()
+    r4 = np.array(R_PAPER[3])
+    inter = {j: len(np.intersect1d(r4, np.array(s))) for j, s in enumerate(S_PAPER)}
+    assert inter[3] == 1 and inter[4] == 2 and inter[2] == 2
+    lo, hi = length_filter_bounds(2, 0.6)
+    assert (lo, hi) == (2, 3)
+    pairs = cf_rs_join_fvt(R, S, 0.6)
+    # qualifying partners of r4: jaccard(r4,s5)=2/3, jaccard(r4,s3)=2/3 >= 0.6
+    assert (3, 4) in pairs and (3, 2) in pairs and (3, 3) not in pairs
+
+
+@pytest.mark.parametrize("t", [0.25, 0.5, 0.625, 0.75, 0.9])
+def test_all_methods_agree_on_paper_example(t):
+    R, S = paper_collections()
+    expected = brute_force_join(R, S, t)
+    assert cf_rs_join_fvt(R, S, t) == expected
+    assert cf_rs_join_lfvt(R, S, t) == expected
+    assert cf_rs_join_device(R, S, t, method="popcount") == expected
+    assert cf_rs_join_device(R, S, t, method="onehot") == expected
+
+
+def test_window_bounds_contiguity():
+    sizes_desc = np.array([9, 7, 7, 5, 3, 2, 1], dtype=np.int32)
+    lo, hi = window_bounds(np.array([4]), sizes_desc, 0.5)
+    # |S| in [2, 8] -> rows with sizes 7,7,5,3,2 -> indices [1, 6)
+    assert (lo[0], hi[0]) == (1, 6)
+
+
+# ---------------------------------------------------------------------- #
+# property tests: every implementation == float64 brute force
+# ---------------------------------------------------------------------- #
+SETS = st.lists(
+    st.lists(st.integers(0, 29), min_size=1, max_size=12),
+    min_size=1,
+    max_size=10,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(r=SETS, s=SETS, t=st.sampled_from([0.25, 0.5, 0.625, 0.75]))
+def test_property_exactness(r, s, t):
+    R = SetCollection.from_ragged([np.array(x) for x in r], universe=30)
+    S = SetCollection.from_ragged([np.array(x) for x in s], universe=30)
+    expected = brute_force_join(R, S, t)
+    assert cf_rs_join_fvt(R, S, t) == expected
+    assert cf_rs_join_lfvt(R, S, t) == expected
+    assert cf_rs_join_device(R, S, t, method="popcount", r_block=4) == expected
+    assert cf_rs_join_device(R, S, t, method="onehot", r_block=4) == expected
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=SETS)
+def test_property_walks_enumerate_seqs(s):
+    """FVT/LFVT walks enumerate exactly seq(a) reversed, for every element."""
+    S = SetCollection.from_ragged([np.array(x) for x in s], universe=30)
+    seqs = build_seqs(S)
+    fvt, lfvt = FVT(S), LFVT(S)
+    for a, seq in seqs.items():
+        assert list(fvt.walk(a)) == seq[::-1]
+        assert list(lfvt.walk(a)) == seq[::-1]
+
+
+def test_early_stop_reduces_visits():
+    """Theorem 3.3: the length filter shortens traversals, result unchanged."""
+    rng = np.random.default_rng(0)
+    r = [rng.choice(50, size=rng.integers(1, 10), replace=False) for _ in range(30)]
+    s = [rng.choice(50, size=rng.integers(1, 20), replace=False) for _ in range(40)]
+    R = SetCollection.from_ragged(r, universe=50)
+    S = SetCollection.from_ragged(s, universe=50)
+    hi_stats, lo_stats = {}, {}
+    hi = cf_rs_join_fvt(R, S, 0.9, stats=hi_stats)
+    lo = cf_rs_join_fvt(R, S, 0.25, stats=lo_stats)
+    assert hi == brute_force_join(R, S, 0.9)
+    assert lo == brute_force_join(R, S, 0.25)
+    # a tighter threshold must visit no more nodes
+    assert hi_stats["nodes_visited"] <= lo_stats["nodes_visited"]

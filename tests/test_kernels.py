@@ -1,0 +1,123 @@
+"""Pallas join kernels vs pure-jnp oracle (interpret=True on CPU).
+
+Sweeps shapes (incl. non-tile-multiples), thresholds and tile configs;
+also validates the end-to-end kernel path inside cf_rs_join_device
+against the float64 brute-force join.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.join import brute_force_join
+from repro.core.sets import SetCollection
+from repro.core.tile_join import cf_rs_join_device, window_bounds
+from repro.kernels import ops
+from repro.kernels.ref import join_ref
+
+
+def _random_problem(rng, m, n, universe, density=0.25):
+    W = max((universe + 31) // 32, 1)
+    r_bm = (rng.random((m, W)) < density).astype(np.uint32)
+    s_bm = (rng.random((n, W)) < density).astype(np.uint32)
+    # pack random bits into words
+    r_bm = rng.integers(0, 2**32, (m, W), dtype=np.uint32) & np.uint32(
+        (1 << 32) - 1
+    ) * r_bm
+    s_bm = rng.integers(0, 2**32, (n, W), dtype=np.uint32) * s_bm
+    # mask tail bits beyond the universe in the last word
+    tail = universe % 32
+    if tail:
+        mask = np.uint32((1 << tail) - 1)
+        r_bm[:, -1] &= mask
+        s_bm[:, -1] &= mask
+    r_sizes = np.bitwise_count(r_bm).sum(1).astype(np.int32)
+    s_sizes = np.bitwise_count(s_bm).sum(1).astype(np.int32)
+    return r_bm, r_sizes, s_bm, s_sizes
+
+
+def _windows(rng, m, n):
+    lo = rng.integers(0, max(n, 1), m).astype(np.int32)
+    span = rng.integers(0, max(n, 1), m).astype(np.int32)
+    hi = np.minimum(lo + span, n).astype(np.int32)
+    return lo, hi
+
+
+SHAPES = [
+    (1, 1, 7),
+    (3, 5, 33),
+    (8, 128, 64),
+    (17, 140, 257),
+    (128, 128, 512),
+    (130, 260, 1025),
+]
+
+
+@pytest.mark.parametrize("kernel", ["bitmap", "onehot"])
+@pytest.mark.parametrize("m,n,universe", SHAPES)
+@pytest.mark.parametrize("t", [0.25, 0.625])
+def test_kernel_matches_ref(kernel, m, n, universe, t):
+    rng = np.random.default_rng(m * 1000 + n + universe)
+    r_bm, r_sz, s_bm, s_sz, = _random_problem(rng, m, n, universe)
+    lo, hi = _windows(rng, m, n)
+    args = (jnp.asarray(r_bm), jnp.asarray(r_sz), jnp.asarray(s_bm),
+            jnp.asarray(s_sz), jnp.asarray(lo), jnp.asarray(hi))
+    expected = np.asarray(join_ref(*args, t))
+    fn = ops.bitmap_join if kernel == "bitmap" else ops.onehot_join
+    got = np.asarray(fn(*args, t))
+    np.testing.assert_array_equal(got, expected)
+
+
+@pytest.mark.parametrize("kernel", ["bitmap", "onehot"])
+@pytest.mark.parametrize("tiles", [(8, 128, 1), (16, 128, 2), (8, 256, 4)])
+def test_kernel_tile_sweep(kernel, tiles):
+    rng = np.random.default_rng(42)
+    r_bm, r_sz, s_bm, s_sz = _random_problem(rng, 24, 300, 200)
+    lo, hi = _windows(rng, 24, 300)
+    args = (jnp.asarray(r_bm), jnp.asarray(r_sz), jnp.asarray(s_bm),
+            jnp.asarray(s_sz), jnp.asarray(lo), jnp.asarray(hi))
+    expected = np.asarray(join_ref(*args, 0.5))
+    fn = ops.bitmap_join if kernel == "bitmap" else ops.onehot_join
+    got = np.asarray(fn(*args, 0.5, tiles=tiles))
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_skip_mask_never_drops_pairs():
+    """Tile skipping is conservative: identical result with skipping forced off."""
+    rng = np.random.default_rng(7)
+    r_bm, r_sz, s_bm, s_sz = _random_problem(rng, 32, 256, 300)
+    # realistic windows derived from sizes over a size-sorted S
+    order = np.argsort(-s_sz)
+    s_bm, s_sz = s_bm[order], s_sz[order]
+    lo, hi = window_bounds(r_sz, s_sz, 0.5)
+    args = (jnp.asarray(r_bm), jnp.asarray(r_sz), jnp.asarray(s_bm),
+            jnp.asarray(s_sz), jnp.asarray(lo.astype(np.int32)),
+            jnp.asarray(hi.astype(np.int32)))
+    expected = np.asarray(join_ref(*args, 0.5))
+    got = np.asarray(ops.bitmap_join(*args, 0.5))
+    np.testing.assert_array_equal(got, expected)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.lists(st.lists(st.integers(0, 40), min_size=1, max_size=10),
+               min_size=1, max_size=8),
+    s=st.lists(st.lists(st.integers(0, 40), min_size=1, max_size=10),
+               min_size=1, max_size=8),
+    t=st.sampled_from([0.25, 0.5, 0.75]),
+)
+def test_kernel_end_to_end_property(r, s, t):
+    R = SetCollection.from_ragged([np.array(x) for x in r], universe=41)
+    S = SetCollection.from_ragged([np.array(x) for x in s], universe=41)
+    expected = brute_force_join(R, S, t)
+    assert cf_rs_join_device(R, S, t, method="kernel_bitmap") == expected
+    assert cf_rs_join_device(R, S, t, method="kernel_onehot") == expected
+
+
+def test_pack_bitmaps_roundtrip():
+    rng = np.random.default_rng(3)
+    sets = [rng.choice(100, size=rng.integers(1, 30), replace=False) for _ in range(20)]
+    S = SetCollection.from_ragged(sets, universe=100)
+    padded, _ = S.padded()
+    packed = np.asarray(ops._pack_bitmaps(jnp.asarray(padded), 100))
+    np.testing.assert_array_equal(packed, S.bitmaps())
