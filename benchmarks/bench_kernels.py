@@ -5,6 +5,12 @@ Pallas interpret mode is a correctness harness, not a timing one; on this
 CPU container the *compiled* jnp twins of the kernels are what we time.
 The TPU projection uses per-tile byte/flop counts of each kernel design
 (DESIGN.md §5): popcount moves 16x fewer HBM bytes, one-hot rides the MXU.
+
+The roofline now includes the *output traffic* term (DESIGN.md §6): the
+dense path writes+ships the O(m·n) boolean mask, the sparse path ships
+per-tile counts + packed (r, s) pairs — bytes proportional to the result.
+Both are reported, alongside measured result density and the host↔device
+bytes each emission mode moves on this container.
 """
 from __future__ import annotations
 
@@ -13,8 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sets import SetCollection
-from repro.core.tile_join import (_onehot_qualify, _popcount_qualify,
-                                  window_bounds)
+from repro.core.tile_join import (_compact_mask, _mask_total, _onehot_qualify,
+                                  _popcount_qualify, round_capacity, window_bounds)
 from repro.data.synth import make_join_dataset
 from repro.launch.analysis import HBM_BW, PEAK_FLOPS
 
@@ -33,18 +39,36 @@ def _prep(R, S):
             jnp.asarray(lo), jnp.asarray(hi), universe, Ss)
 
 
-def tpu_projection(m, n, universe, skip_frac=0.0):
-    """Roofline seconds per R-S block for each kernel design."""
+def tpu_projection(m, n, universe, skip_frac=0.0, pairs=None):
+    """Roofline seconds per R-S block for each kernel design.
+
+    With ``pairs`` given, output traffic models the sparse emission path
+    as implemented (DESIGN.md §6): the live-tiled kernel still writes its
+    per-tile bool masks to HBM and the on-device compaction re-reads
+    them (2x the live region), plus the per-tile counts and the packed
+    pair array that actually cross the host boundary. Without ``pairs``,
+    the dense (m, n) bool mask write + host transfer.
+    """
     W = (universe + 31) // 32
     live = 1.0 - skip_frac
-    # popcount: bytes = bitmaps in + bool out; VPU ops ~ 2 per word-pair
-    pop_bytes = (m * W + n * W) * 4 + m * n
-    pop_ops = 2.0 * m * n * W * live          # AND+popcount per uint32 lane
+    n_tiles = max(int(np.ceil(m / 256) * np.ceil(n / 256)), 1)
+    if pairs is None:
+        out_bytes = m * n                    # dense bool mask
+    else:
+        staged = 2 * live * m * n            # HBM-staged masks, write+read
+        out_bytes = int(staged) + 8 * round_capacity(pairs) + 4 * int(
+            live * n_tiles)
+    in_bytes = (m * W + n * W) * 4
+    # popcount: VPU ops ~ 2 per word-pair on live tiles
+    pop_ops = 2.0 * m * n * W * live
     # one-hot: same bitmap bytes in; MXU flops = 2*m*n*(32W)
     oh_flops = 2.0 * m * n * (32 * W) * live
     return {
-        "popcount_s": max(pop_bytes / HBM_BW, pop_ops / (PEAK_FLOPS / 64)),
-        "onehot_s": max(pop_bytes / HBM_BW, oh_flops / PEAK_FLOPS),
+        "popcount_s": max((in_bytes + out_bytes) / HBM_BW,
+                          pop_ops / (PEAK_FLOPS / 64)),
+        "onehot_s": max((in_bytes + out_bytes) / HBM_BW,
+                        oh_flops / PEAK_FLOPS),
+        "out_bytes": out_bytes,
     }
 
 
@@ -60,7 +84,7 @@ def main() -> dict:
                                      ).block_until_ready()
 
         pop()  # compile
-        _, t_pop = timed(pop, repeat=3)
+        mask, t_pop = timed(pop, repeat=3)
 
         r_pad, _ = R.padded()
         s_pad, _ = Ss.padded()
@@ -72,17 +96,57 @@ def main() -> dict:
 
         oh()
         _, t_oh = timed(oh, repeat=3)
+
+        # sparse emission: count + on-device compaction + packed transfer
+        n_pairs = int(_mask_total(mask))
+        cap = round_capacity(n_pairs)
+
+        def compact():
+            if not cap:
+                return np.zeros((0, 2), np.int32)
+            return np.asarray(_compact_mask(mask, size=cap))
+
+        compact()  # compile
+        _, t_compact = timed(compact, repeat=3)
+
+        def dense_xfer():
+            return np.asarray(mask)
+
+        _, t_dense = timed(dense_xfer, repeat=3)
+
+        density = n_pairs / max(m * n, 1)
+        sparse_bytes = cap * 8 + 4
+        dense_bytes = m * n
+
         # tile-skip fraction from the windows
         cols = np.arange(n)
         in_win = ((cols[None, :] >= np.asarray(lo)[:, None])
                   & (cols[None, :] < np.asarray(hi)[:, None]))
         skip = 1.0 - in_win.mean()
-        proj = tpu_projection(m, n, universe, skip)
+        proj_dense = tpu_projection(m, n, universe, skip)
+        proj_sparse = tpu_projection(m, n, universe, skip, pairs=n_pairs)
         emit(f"kernel/{ds}/popcount_cpu", t_pop,
-             f"tpu_proj_us={proj['popcount_s']*1e6:.1f};skip={skip:.2f}")
+             f"tpu_proj_us={proj_dense['popcount_s']*1e6:.1f};skip={skip:.2f}")
         emit(f"kernel/{ds}/onehot_cpu", t_oh,
-             f"tpu_proj_us={proj['onehot_s']*1e6:.1f}")
-        out[ds] = {"pop": t_pop, "oh": t_oh, **proj}
+             f"tpu_proj_us={proj_dense['onehot_s']*1e6:.1f}")
+        emit(f"kernel/{ds}/emit_sparse", t_compact,
+             f"pairs={n_pairs};density={density:.2e}"
+             f";bytes={sparse_bytes};tpu_proj_us="
+             f"{proj_sparse['popcount_s']*1e6:.1f}")
+        emit(f"kernel/{ds}/emit_dense", t_dense,
+             f"bytes={dense_bytes};tpu_proj_us="
+             f"{proj_dense['popcount_s']*1e6:.1f}")
+        out[ds] = {
+            "pop": t_pop, "oh": t_oh,
+            "emit_sparse_s": t_compact, "emit_dense_s": t_dense,
+            "result_pairs": n_pairs, "result_density": density,
+            "output_bytes_sparse": sparse_bytes,
+            "output_bytes_dense": dense_bytes,
+            "popcount_s": proj_dense["popcount_s"],
+            "onehot_s": proj_dense["onehot_s"],
+            "popcount_sparse_s": proj_sparse["popcount_s"],
+            "onehot_sparse_s": proj_sparse["onehot_s"],
+        }
     return out
 
 

@@ -4,6 +4,10 @@ The paper's mechanism: MR-CF routes each S set once + R sets a few times
 (length-window replication only), while RP-PPJoin replicates whole sets
 per prefix token and FS-Join re-emits per-segment partials. We count the
 exact bytes each algorithm ships.
+
+Also reports the reduce-output side (DESIGN.md §6): result density and
+the bytes the join result actually moves — compacted (r, s) pairs vs the
+dense per-shard boolean masks the pre-sparse pipeline shipped.
 """
 from __future__ import annotations
 
@@ -33,9 +37,23 @@ def main() -> dict:
                  f"bytes={pp_stats['shuffle_bytes']}")
             emit(f"disk/{ds}/t{t}/fs_join", 0.0,
                  f"bytes={fs_stats['shuffle_bytes']}")
-            out[(ds, t)] = (ours_stats["shuffle_bytes"],
-                            pp_stats["shuffle_bytes"],
-                            fs_stats["shuffle_bytes"])
+            dense = ours_stats["dense_mask_bytes"]
+            density = ours_stats["result_pairs"] / max(len(R) * len(S), 1)
+            emit(f"disk/{ds}/t{t}/reduce_out", 0.0,
+                 f"pairs={ours_stats['result_pairs']}"
+                 f";density={density:.2e}"
+                 f";pair_bytes={ours_stats['pair_bytes']}"
+                 f";compacted_bytes={ours_stats['reduce_bytes']}"
+                 f";dense_mask_bytes={dense}")
+            out[(ds, t)] = {
+                "mr_cf": ours_stats["shuffle_bytes"],
+                "rp_ppjoin": pp_stats["shuffle_bytes"],
+                "fs_join": fs_stats["shuffle_bytes"],
+                "result_pairs": ours_stats["result_pairs"],
+                "result_density": density,
+                "reduce_bytes_compacted": ours_stats["reduce_bytes"],
+                "reduce_bytes_dense": dense,
+            }
     return out
 
 

@@ -3,7 +3,10 @@
 Mapping (DESIGN.md §2):
   map     -> host routing via ``core.partition`` (length-range, Eq. 2-3)
   shuffle -> the sharded device layout itself; bytes counted exactly
-  reduce  -> per-shard candidate-free tile join under ``shard_map``
+  reduce  -> per-shard candidate-free tile join under ``shard_map``;
+             shard-local results are compacted on device into
+             variable-length pair buffers (DESIGN.md §6), so reduce
+             output bytes count compacted pairs, not dense masks
 
 Two execution paths share the same shard-local compute:
   * ``shard_map``: one shard per device along the mesh ``data`` axis
@@ -19,11 +22,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.5 re-exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map
 
 from .partition import Partitioning, hash_partition, load_aware_partition, route
 from .sets import SetCollection
-from .tile_join import popcount_counts, qualify, window_bounds
+from .tile_join import (_compact_mask, _mask_total, popcount_counts, qualify,
+                        round_capacity, window_bounds)
 
 __all__ = ["mr_cf_rs_join", "shard_blocks", "local_join_mask"]
 
@@ -117,13 +125,22 @@ def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str):
 def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                   n_shards: int, strategy: str = "load_aware",
                   method: str = "popcount", mesh: Mesh | None = None,
-                  axis: str = "data", stats: dict | None = None) -> set:
+                  axis: str = "data", stats: dict | None = None,
+                  emit: str = "pairs") -> set:
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
     mesh:     if given, reduce runs under shard_map on ``axis`` (whose size
               must equal ``n_shards``); otherwise a sequential shard loop.
+    emit:     'pairs' (default) — shard-local results are compacted on
+              device into variable-length pair buffers; only the packed
+              (shard, row, col) triples cross the host boundary and
+              ``reduce_bytes`` counts compacted pairs (the paper's Fig. 8
+              model). 'mask' — dense fallback: every per-shard boolean
+              mask is transferred and scanned on host.
     """
+    if emit not in ("pairs", "mask"):
+        raise ValueError(f"unknown emit mode {emit!r}")
     if not len(R) or not len(S):
         return set()
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
@@ -131,22 +148,48 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     blocks, (r_ids, s_ids), route_stats = shard_blocks(R, S, part, t)
     if mesh is not None:
         assert mesh.shape[axis] == part.n_shards, (mesh.shape, part.n_shards)
-        masks = np.asarray(_shard_map_reduce(blocks, mesh, axis, t=t, method=method))
+        masks_dev = _shard_map_reduce(blocks, mesh, axis, t=t, method=method)
     else:
-        masks = np.asarray(
-            _loop_reduce(tuple(jnp.asarray(b) for b in blocks), t=t, method=method)
-        )
+        masks_dev = _loop_reduce(tuple(jnp.asarray(b) for b in blocks),
+                                 t=t, method=method)
     pairs: set = set()
-    for k in range(part.n_shards):
-        rr, ss = np.nonzero(masks[k])
-        pairs.update(
-            (int(r_ids[k, i]), int(s_ids[k, j]))
-            for i, j in zip(rr, ss)
-            if r_ids[k, i] >= 0 and s_ids[k, j] >= 0
-        )
+    dense_bytes = int(np.prod(masks_dev.shape))
+    if emit == "pairs":
+        # device-side compaction into the per-shard variable-length pair
+        # buffers (shard-major (shard, row, col) triples): ship one count
+        # + the packed array
+        total = int(_mask_total(masks_dev))
+        cap = round_capacity(total)
+        if cap:
+            triples = np.asarray(_compact_mask(masks_dev, size=cap))[:total]
+            rid = r_ids[triples[:, 0], triples[:, 1]]
+            sid = s_ids[triples[:, 0], triples[:, 2]]
+            keep = (rid >= 0) & (sid >= 0)  # belt: padding can't qualify
+            pairs.update(zip(map(int, rid[keep]), map(int, sid[keep])))
+        reduce_bytes = cap * 12 + 4
+        n_result = total
+    else:
+        masks = np.asarray(masks_dev)
+        for k in range(part.n_shards):
+            rr, ss = np.nonzero(masks[k])
+            pairs.update(
+                (int(r_ids[k, i]), int(s_ids[k, j]))
+                for i, j in zip(rr, ss)
+                if r_ids[k, i] >= 0 and s_ids[k, j] >= 0
+            )
+        reduce_bytes = dense_bytes
+        n_result = len(pairs)
     if stats is not None:
         stats.update(route_stats)
         stats["intervals"] = part.intervals
         stats["psi"] = part.psi
         stats["n_shards"] = part.n_shards
+        stats["emit"] = emit
+        stats["result_pairs"] = n_result
+        # compacted result bytes: 2 int32 ids per qualifying pair — the
+        # quantity the paper's shuffle/disk accounting charges the reduce
+        # output with (vs the dense per-shard masks)
+        stats["pair_bytes"] = n_result * 8
+        stats["reduce_bytes"] = reduce_bytes
+        stats["dense_mask_bytes"] = dense_bytes
     return pairs

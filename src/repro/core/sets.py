@@ -33,7 +33,7 @@ def _as_ragged(sets: Sequence[np.ndarray]) -> list[np.ndarray]:
     return out
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SetCollection:
     """A collection of sets over a dense integer universe ``[0, universe)``.
 
@@ -41,6 +41,11 @@ class SetCollection:
     ``sorted_by_size`` is True, sets are ordered by (size desc, id asc) and
     ``ids[k]`` maps row ``k`` back to the original set id — the array
     analogue of the FVT size ordering.
+
+    ``eq=False``: collections compare and hash by identity (the generated
+    ``__eq__`` would be meaningless over ragged ndarray lists anyway),
+    which lets device-resident representations be cached per collection in
+    a ``WeakKeyDictionary`` (see ``tile_join``).
     """
 
     sets: list[np.ndarray]

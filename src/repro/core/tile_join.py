@@ -13,10 +13,16 @@ size-sorted S:
     oracles and as the CPU execution path, plus the host driver that
     streams R blocks and emits qualifying pairs (no candidate pairs are
     ever materialized in HBM: thresholding happens on-device).
+  * Output is sparse by default (DESIGN.md §6): qualifying pairs are
+    compacted on device and only the packed (r, s) index array crosses
+    the host boundary, so output traffic scales with the result size.
+    The sorted-S device representation is cached per collection across R
+    blocks and across calls.
 """
 from __future__ import annotations
 
 import functools
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +36,9 @@ __all__ = [
     "qualify",
     "window_bounds",
     "cf_rs_join_device",
+    "clear_s_rep_cache",
+    "round_capacity",
+    "PAIR_CAP_GRAIN",
 ]
 
 
@@ -130,35 +139,124 @@ def _onehot_qualify(r_pad, r_sz, s_pad, s_sz, col_lo, col_hi, *, t, universe):
     return qualify(counts, r_sz, s_sz, t) & in_window
 
 
+# Capacity rounding for the jitted compactions (static output size):
+# next power-of-two multiple of the grain, so recompiles are O(log) in
+# result size. Canonical definition — the kernels layer re-exports it.
+PAIR_CAP_GRAIN = 128
+
+
+def round_capacity(n: int) -> int:
+    """Regrow protocol: next power-of-two multiple of PAIR_CAP_GRAIN >= n."""
+    if n <= 0:
+        return 0
+    cap = PAIR_CAP_GRAIN
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+
+
+@jax.jit
+def _mask_total(mask):
+    return jnp.sum(mask, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _compact_mask(mask, *, size):
+    """Device-side segment compaction of a dense bool mask.
+
+    Works for any rank: an (m, n) mask packs to (size, 2) (row, col)
+    int32, an (n_shards, m, n) stack to (size, 3) (shard, row, col).
+    Entries past the true count are -1 capacity padding.
+    """
+    idx = jnp.nonzero(mask, size=size, fill_value=-1)
+    return jnp.stack(idx, axis=1)
+
+
+# ------------------------------------------------------------------ #
+# device-resident S representation cache
+#
+# The sorted-S side of the join is reused across every R block of a call
+# AND across calls (the LLM-dedup pipeline joins each incoming batch
+# against the same curated corpus): keep the size-sorted collection plus
+# its device arrays alive per source collection. WeakKeyDictionary ->
+# entries die with the collection, no manual invalidation needed
+# (collections are immutable by convention).
+# ------------------------------------------------------------------ #
+_S_REP_CACHE: "weakref.WeakKeyDictionary[SetCollection, dict]" = (
+    weakref.WeakKeyDictionary())
+
+
+def clear_s_rep_cache() -> None:
+    _S_REP_CACHE.clear()
+
+
+def _s_device_rep(S: SetCollection, family: str, W: int,
+                  stats: dict | None = None):
+    """-> (sorted collection, device rep, device sizes, np sizes)."""
+    entry = _S_REP_CACHE.get(S)
+    if entry is None:
+        entry = {}
+        _S_REP_CACHE[S] = entry
+    key = ("bitmap", W) if family == "bitmap" else ("padded",)
+    hit = "sorted" in entry and key in entry
+    if "sorted" not in entry:
+        # None = "the key itself is already sorted": the cache value must
+        # not hold a strong reference to its own WeakKeyDictionary key,
+        # or the entry (and the device arrays) can never be evicted
+        Ss = None if S.sorted_by_size else S.sort_by_size()
+        entry["sorted"] = Ss
+        entry["sizes_np"] = (S if Ss is None else Ss).sizes()
+        entry["sizes_dev"] = jnp.asarray(entry["sizes_np"])
+    Ss = entry["sorted"] if entry["sorted"] is not None else S
+    if key not in entry:
+        if family == "bitmap":
+            entry[key] = jnp.asarray(Ss.bitmaps(W))
+        else:
+            entry[key] = jnp.asarray(Ss.padded()[0])
+    if stats is not None:
+        stats["s_rep_cache_hit"] = hit
+    return Ss, entry[key], entry["sizes_dev"], entry["sizes_np"]
+
+
 def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                       method: str = "popcount", r_block: int = 1024,
-                      stats: dict | None = None) -> set:
+                      stats: dict | None = None, emit: str = "pairs",
+                      pair_capacity: int | None = None) -> set:
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
             | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU).
+    emit:   'pairs' (default) — qualifying pairs are compacted on device
+            and only the packed (row, col) int32 array crosses the host
+            boundary (output bytes ~ result size; kernel methods also run
+            the live-tile schedule, so skipped tiles cost zero grid
+            steps). 'mask' — dense fallback: the (m, n) boolean mask is
+            transferred and scanned on host (output bytes O(m·n)).
+    pair_capacity: optional initial pair-array capacity per R block for
+            emit='pairs'; regrown automatically on overflow.
     """
+    if emit not in ("pairs", "mask"):
+        raise ValueError(f"unknown emit mode {emit!r}")
     if not len(R) or not len(S):
         return set()
-    Ss = S.sort_by_size() if not S.sorted_by_size else S
-    s_sizes = Ss.sizes()
+    family = "bitmap" if method in ("popcount", "kernel_bitmap") else "onehot"
+    universe = max(R.universe, S.universe)
+    W = max((universe + 31) // 32, 1)
+    Ss, s_rep, s_sz, s_sizes = _s_device_rep(S, family, W, stats)
     r_sizes_all = R.sizes()
     lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t)
-
-    universe = max(R.universe, S.universe)
-    if method in ("popcount", "kernel_bitmap"):
-        W = max((universe + 31) // 32, 1)
-        s_rep = jnp.asarray(Ss.bitmaps(W))
-    else:
-        s_pad_np, _ = Ss.padded()
-        s_rep = jnp.asarray(s_pad_np)
-    s_sz = jnp.asarray(s_sizes)
 
     if method in ("kernel_bitmap", "kernel_onehot"):
         from repro.kernels import ops as kops  # deferred: optional dep
 
     pairs: set = set()
     m = len(R)
+    out_sparse = 0   # bytes actually shipped by the sparse path
+    out_dense = 0    # bytes the dense path would ship
+    n_pairs_total = 0
+    live = total_tiles = 0
     for start in range(0, m, r_block):
         stop = min(start + r_block, m)
         sl = slice(start, stop)
@@ -166,27 +264,73 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         r_sz = jnp.asarray(r_sizes_all[sl])
         lo = jnp.asarray(lo_all[sl])
         hi = jnp.asarray(hi_all[sl])
-        if method == "popcount":
-            mask = _popcount_qualify(jnp.asarray(sub.bitmaps(W)), r_sz,
-                                     s_rep, s_sz, lo, hi, t=t)
-        elif method == "onehot":
-            r_pad, _ = sub.padded()
-            mask = _onehot_qualify(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
-                                   lo, hi, t=t, universe=universe)
-        elif method == "kernel_bitmap":
-            mask = kops.bitmap_join(jnp.asarray(sub.bitmaps(W)), r_sz,
-                                    s_rep, s_sz, lo, hi, t)
-        elif method == "kernel_onehot":
-            r_pad, _ = sub.padded()
-            mask = kops.onehot_join(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
-                                    lo, hi, t, universe)
+        out_dense += (stop - start) * len(Ss)
+        kstats: dict = {}
+        if method in ("kernel_bitmap", "kernel_onehot") and emit == "pairs":
+            # live-tile schedule + in-kernel counts + device compaction
+            if method == "kernel_bitmap":
+                pp, n_pairs = kops.bitmap_join_pairs(
+                    jnp.asarray(sub.bitmaps(W)), r_sz, s_rep, s_sz, lo, hi,
+                    t, capacity=pair_capacity, stats=kstats)
+            else:
+                r_pad, _ = sub.padded()
+                pp, n_pairs = kops.onehot_join_pairs(
+                    jnp.asarray(r_pad), r_sz, s_rep, s_sz, lo, hi, t,
+                    universe=universe, capacity=pair_capacity, stats=kstats)
+            local = np.asarray(pp)[:n_pairs]
+            out_sparse += kstats.get("output_bytes", 0)
+            live += kstats.get("live_tiles", 0)
+            total_tiles += kstats.get("total_tiles", 0)
         else:
-            raise ValueError(f"unknown method {method!r}")
-        rr, ss = np.nonzero(np.asarray(mask))
-        pairs.update(
-            (int(R.ids[start + i]), int(Ss.ids[j])) for i, j in zip(rr, ss)
-        )
+            if method == "popcount":
+                mask = _popcount_qualify(jnp.asarray(sub.bitmaps(W)), r_sz,
+                                         s_rep, s_sz, lo, hi, t=t)
+            elif method == "onehot":
+                r_pad, _ = sub.padded()
+                mask = _onehot_qualify(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
+                                       lo, hi, t=t, universe=universe)
+            elif method == "kernel_bitmap":
+                mask = kops.bitmap_join(jnp.asarray(sub.bitmaps(W)), r_sz,
+                                        s_rep, s_sz, lo, hi, t)
+            elif method == "kernel_onehot":
+                r_pad, _ = sub.padded()
+                mask = kops.onehot_join(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
+                                        lo, hi, t, universe)
+            else:
+                raise ValueError(f"unknown method {method!r}")
+            if emit == "pairs":
+                # jnp-level compaction: only a count + the packed pairs
+                # ever leave the device
+                n_pairs = int(_mask_total(mask))
+                cap = round_capacity(n_pairs if pair_capacity is None
+                                 else max(pair_capacity, 0))
+                while cap < n_pairs:  # overflow: regrow (exact, count known)
+                    cap = round_capacity(n_pairs)
+                local = (np.asarray(_compact_mask(mask, size=cap))[:n_pairs]
+                         if cap else np.zeros((0, 2), np.int64))
+                out_sparse += cap * 8 + 4
+            else:
+                mask_np = np.asarray(mask)
+                out_sparse += mask_np.size
+                rr, ss = np.nonzero(mask_np)
+                local = np.stack([rr, ss], axis=1) if len(rr) else (
+                    np.zeros((0, 2), np.int64))
+                n_pairs = len(local)
+        if len(local):
+            rid = R.ids[start + local[:, 0]]
+            sid = Ss.ids[local[:, 1]]
+            pairs.update(zip(map(int, rid), map(int, sid)))
+        n_pairs_total += n_pairs
     if stats is not None:
         stats["method"] = method
+        stats["emit"] = emit
         stats["r_blocks"] = -(-m // r_block)
+        stats["pair_count"] = n_pairs_total
+        stats["output_bytes"] = out_sparse
+        stats["dense_mask_bytes"] = out_dense
+        if method in ("kernel_bitmap", "kernel_onehot") and emit == "pairs":
+            stats["live_tiles"] = live
+            stats["total_tiles"] = total_tiles
     return pairs
+
+

@@ -8,13 +8,20 @@ threshold and the Lemma-3.1 column window *in kernel* — only a boolean
 qualifying tile ever leaves VMEM (candidate-free: no pair list, no counts
 are spilled to HBM).
 
-Tile-level early stop (Theorem 3.3): a host-computed (m_tiles, n_tiles)
-skip mask — derived from the size-sorted column windows — gates the whole
-accumulation body with ``pl.when``, so out-of-window tiles do zero VPU
-work, the tile analogue of stopping the root-ward walk.
+Tile-level early stop (Theorem 3.3) comes in two flavours:
 
-Grid: (m/TM, n/TN, W/TW), k innermost so the (i, j) output tile is
-revisited across universe blocks.
+  * dense fallback (``bitmap_join_tiled``): a host-computed
+    (m_tiles, n_tiles) skip mask gates the accumulation body with
+    ``pl.when`` — out-of-window tiles do zero VPU work but still cost a
+    (predicated) grid step. Grid (m/TM, n/TN, W/TW), k innermost.
+  * live-tile schedule (``bitmap_join_live_tiled``, DESIGN.md §6): the
+    host compacts the skip mask into a list of live (i, j) tile
+    coordinates; the kernel runs a 1-D grid over live tiles only, with
+    scalar-prefetched index maps steering the block DMAs. Skipped tiles
+    contribute zero grid steps. Each live tile emits its qualifying
+    sub-mask plus an exact per-tile pair count, the input to the
+    jnp-level pair compaction in ``ops`` — only packed (r, s) index
+    pairs ever cross the host boundary.
 """
 from __future__ import annotations
 
@@ -25,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bitmap_join_tiled", "DEFAULT_TILES"]
+__all__ = ["bitmap_join_tiled", "bitmap_join_live_tiled", "DEFAULT_TILES"]
 
 # (TM, TN, TW). HBM traffic per output tile ~ (TM+TN)*TW*4 per k-step, so
 # total bitmap re-reads scale with (1/TM + 1/TN): (256,256) halves traffic
@@ -34,8 +41,28 @@ __all__ = ["bitmap_join_tiled", "DEFAULT_TILES"]
 DEFAULT_TILES = (256, 256, 8)
 
 
+def _popcount_accumulate(r_bm_ref, s_bm_ref, acc_ref):
+    # (TM, 1, TW) & (1, TN, TW) -> popcount -> (TM, TN)
+    inter = jnp.bitwise_and(r_bm_ref[...][:, None, :], s_bm_ref[...][None, :, :])
+    acc_ref[...] += jnp.sum(
+        jax.lax.population_count(inter).astype(jnp.int32), axis=-1
+    )
+
+
+def _qualify_tile(acc, r_sz_ref, s_sz_ref, lo_ref, hi_ref, j, *, t, tn):
+    """Threshold + Lemma-3.1 window for one (TM, TN) tile at column-tile j."""
+    f = acc.astype(jnp.float32)
+    sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)  # (TM,1)+(1,TN)
+    cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+    in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
+    return (f * (1.0 + t) >= t * sizes) & (acc > 0) & in_window
+
+
 def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
             out_ref, acc_ref, *, t: float, n_kblocks: int, tn: int):
+    # program_id must be read outside pl.when bodies: the interpreter only
+    # substitutes it at kernel-trace time, not inside cond branch jaxprs.
+    j = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -44,19 +71,12 @@ def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
 
     @pl.when(skip_ref[0, 0] == 0)
     def _accumulate():
-        # (TM, 1, TW) & (1, TN, TW) -> popcount -> (TM, TN)
-        inter = jnp.bitwise_and(r_bm_ref[...][:, None, :], s_bm_ref[...][None, :, :])
-        acc_ref[...] += jnp.sum(
-            jax.lax.population_count(inter).astype(jnp.int32), axis=-1
-        )
+        _popcount_accumulate(r_bm_ref, s_bm_ref, acc_ref)
 
     @pl.when(k == n_kblocks - 1)
     def _qualify():
-        f = acc_ref[...].astype(jnp.float32)
-        sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)  # (TM,1)+(1,TN)
-        cols = pl.program_id(1) * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
-        in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
-        out_ref[...] = (f * (1.0 + t) >= t * sizes) & (acc_ref[...] > 0) & in_window
+        out_ref[...] = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref,
+                                     lo_ref, hi_ref, j, t=t, tn=tn)
 
 
 @functools.partial(
@@ -94,3 +114,76 @@ def bitmap_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
         scratch_shapes=[pltpu.VMEM((TM, TN), jnp.int32)],
         interpret=interpret,
     )(skip, r_bitmaps, s_bitmaps, r_sizes, s_sizes, lo, hi)
+
+
+# ---------------------------------------------------------------------- #
+# live-tile schedule: sparse pair emission (DESIGN.md §6)
+# ---------------------------------------------------------------------- #
+def _live_kernel(ti_ref, tj_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref,
+                 lo_ref, hi_ref, mask_ref, cnt_ref, acc_ref, *,
+                 t: float, n_kblocks: int, tn: int):
+    l = pl.program_id(0)
+    k = pl.program_id(1)
+    j = tj_ref[l]  # column-tile coordinate of this live tile
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # no skip gate: only live tiles exist in the grid at all
+    _popcount_accumulate(r_bm_ref, s_bm_ref, acc_ref)
+
+    @pl.when(k == n_kblocks - 1)
+    def _emit():
+        q = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref, lo_ref, hi_ref,
+                          j, t=t, tn=tn)
+        mask_ref[...] = q[None]
+        cnt_ref[...] = jnp.sum(q, dtype=jnp.int32).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "tiles", "interpret"))
+def bitmap_join_live_tiled(tile_i, tile_j, r_bitmaps, r_sizes, s_bitmaps,
+                           s_sizes, lo, hi, *, t: float, tiles=DEFAULT_TILES,
+                           interpret: bool = False):
+    """Popcount join over the live tiles only; see ops.bitmap_join_pairs.
+
+    tile_i/tile_j (L,) int32 live-tile coordinates (scalar-prefetched);
+    remaining operands pre-padded as in ``bitmap_join_tiled``. Returns
+    (mask (L, TM, TN) bool, counts (L, 1) int32): the qualifying sub-mask
+    and exact pair count per live tile. Both stay device-resident — the
+    jnp compaction in ``ops`` turns them into the packed pair array.
+    """
+    TM, TN, TW = tiles
+    M, W = r_bitmaps.shape
+    N = s_bitmaps.shape[0]
+    L = tile_i.shape[0]
+    assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
+    grid = (L, W // TW)
+
+    kernel = functools.partial(_live_kernel, t=t, n_kblocks=grid[1], tn=TN)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TM, TW), lambda l, k, ti, tj: (ti[l], k)),
+            pl.BlockSpec((TN, TW), lambda l, k, ti, tj: (tj[l], k)),
+            pl.BlockSpec((TM, 1), lambda l, k, ti, tj: (ti[l], 0)),
+            pl.BlockSpec((1, TN), lambda l, k, ti, tj: (0, tj[l])),
+            pl.BlockSpec((TM, 1), lambda l, k, ti, tj: (ti[l], 0)),
+            pl.BlockSpec((TM, 1), lambda l, k, ti, tj: (ti[l], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, TM, TN), lambda l, k, ti, tj: (l, 0, 0)),
+            pl.BlockSpec((1, 1), lambda l, k, ti, tj: (l, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((TM, TN), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((L, TM, TN), jnp.bool_),
+            jax.ShapeDtypeStruct((L, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tile_i, tile_j, r_bitmaps, s_bitmaps, r_sizes, s_sizes, lo, hi)

@@ -1,30 +1,54 @@
-"""Public jit'd wrappers for the join kernels: padding, skip masks, dispatch.
+"""Public jit'd wrappers for the join kernels: padding, scheduling, emission.
 
 ``bitmap_join`` / ``onehot_join`` accept unpadded device arrays (the layout
 produced by ``SetCollection``), pad to tile multiples, derive the
 tile-level early-stop mask from the per-row windows (Theorem 3.3 at tile
-granularity), invoke the Pallas kernel and slice the result back.
+granularity), invoke the Pallas kernel and slice the result back. They
+return the dense (m, n) boolean mask — the fallback output format.
+
+``bitmap_join_pairs`` / ``onehot_join_pairs`` are the sparse emission path
+(DESIGN.md §6): the host compacts the skip mask into live (i, j) tile
+coordinates, a 1-D live-tile grid computes per-tile qualifying sub-masks +
+exact pair counts (skipped tiles cost zero grid steps), and an on-device
+segment compaction packs qualifying (r, s) index pairs into a flat int32
+array. Only the per-tile counts (4·L bytes) and the packed pair array
+(8·P bytes) ever cross the host↔device boundary — output traffic scales
+with the result size, not O(m·n).
 
 On CPU backends the kernels run with ``interpret=True`` (Python semantics,
 bit-exact); on TPU they compile to Mosaic.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tile_join import PAIR_CAP_GRAIN, round_capacity
 
 from . import bitmap_join as _bj
 from . import onehot_join as _oj
 
-__all__ = ["bitmap_join", "onehot_join", "pick_tiles"]
+__all__ = ["bitmap_join", "onehot_join", "bitmap_join_pairs",
+           "onehot_join_pairs", "join_pairs", "pick_tiles", "round_capacity",
+           "PAIR_CAP_GRAIN"]
 
 
 def _interpret_default():
-    """Off-TPU, run kernels under the Mosaic TPU interpreter (exact)."""
+    """Off-TPU, run kernels under the interpreter (exact Python semantics).
+
+    Newer jax exposes ``pltpu.InterpretParams`` (the Mosaic TPU
+    interpreter); on versions without it the generic Pallas interpreter
+    (``interpret=True``) is the correct fallback.
+    """
     if jax.default_backend() == "tpu":
         return False
-    return pltpu.InterpretParams()
+    if hasattr(pltpu, "InterpretParams"):
+        return pltpu.InterpretParams()
+    return True
 
 
 def pick_tiles(m: int, n: int, w: int, defaults) -> tuple[int, int, int]:
@@ -63,7 +87,26 @@ def _tile_skip_mask(lo, hi, m_tiles, n_tiles, tm, tn):
     return skip.astype(jnp.int32)
 
 
-def _prepare(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults):
+def _live_tiles(lo_p, hi_p, m_tiles, n_tiles, tm, tn):
+    """Host-side skip-mask compaction -> live (i, j) tile coordinate lists.
+
+    Same conservative criterion as ``_tile_skip_mask``, evaluated in numpy
+    so the live list exists before kernel launch (it parameterizes the
+    grid). Returns two (L,) int32 arrays, row-major tile order.
+    """
+    lo2 = np.asarray(lo_p).reshape(m_tiles, tm)
+    hi2 = np.asarray(hi_p).reshape(m_tiles, tm)
+    tile_lo = lo2.min(axis=1)
+    tile_hi = hi2.max(axis=1)
+    starts = np.arange(n_tiles, dtype=np.int64) * tn
+    live = (tile_lo[:, None] < starts[None, :] + tn) & (
+        tile_hi[:, None] > starts[None, :])
+    ti, tj = np.nonzero(live)
+    return ti.astype(np.int32), tj.astype(np.int32)
+
+
+def _pad_operands(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles,
+                  defaults):
     m, w = r_bitmaps.shape
     n = s_bitmaps.shape[0]
     TM, TN, TW = tiles if tiles is not None else pick_tiles(m, n, w, defaults)
@@ -71,14 +114,24 @@ def _prepare(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults):
     sb = _pad_to(_pad_to(s_bitmaps, 0, TN), 1, TW)
     r_sz = _pad_to(r_sizes.astype(jnp.int32), 0, TM).reshape(-1, 1)
     s_sz = _pad_to(s_sizes.astype(jnp.int32), 0, TN).reshape(1, -1)
-    # padded rows get an empty window [0, 0)
+    # padded rows get an empty window [0, 0) -> they can never qualify
     lo_p = _pad_to(lo.astype(jnp.int32), 0, TM).reshape(-1, 1)
     hi_p = _pad_to(hi.astype(jnp.int32), 0, TM).reshape(-1, 1)
+    return rb, r_sz, sb, s_sz, lo_p, hi_p, (TM, TN, TW), m, n
+
+
+def _prepare(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults):
+    rb, r_sz, sb, s_sz, lo_p, hi_p, tls, m, n = _pad_operands(
+        r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults)
+    TM, TN, _ = tls
     m_tiles, n_tiles = rb.shape[0] // TM, sb.shape[0] // TN
     skip = _tile_skip_mask(lo_p[:, 0], hi_p[:, 0], m_tiles, n_tiles, TM, TN)
-    return rb, r_sz, sb, s_sz, lo_p, hi_p, skip, (TM, TN, TW), m, n
+    return rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n
 
 
+# ---------------------------------------------------------------------- #
+# dense-mask fallback
+# ---------------------------------------------------------------------- #
 def bitmap_join(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, t: float,
                 tiles=None, interpret: bool | None = None) -> jax.Array:
     """(m, n) bool qualifying-pair matrix via the popcount kernel."""
@@ -99,21 +152,119 @@ def onehot_join(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo, hi,
     padded element lists (int32 with -1 pads), converts to bitmaps first.
     """
     interpret = _interpret_default() if interpret is None else interpret
-    r_in = r_bitmaps_or_padded
-    if r_in.dtype != jnp.uint32:
-        assert universe is not None, "universe required to pack element lists"
-        r_in = _pack_bitmaps(r_in, universe)
-    if s_bitmaps.dtype != jnp.uint32:
-        assert universe is not None
-        s_bitmaps = _pack_bitmaps(s_bitmaps, universe)
-    W = max(r_in.shape[1], s_bitmaps.shape[1])
-    r_in = _pad_to(r_in, 1, W)
-    s_bitmaps = _pad_to(s_bitmaps, 1, W)
+    r_in, s_in = _coerce_bitmaps(r_bitmaps_or_padded, s_bitmaps, universe)
     rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n = _prepare(
-        r_in, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, _oj.DEFAULT_TILES)
+        r_in, r_sizes, s_in, s_sizes, lo, hi, tiles, _oj.DEFAULT_TILES)
     out = _oj.onehot_join_tiled(rb, r_sz, sb, s_sz, lo_p, hi_p, skip,
                                 t=t, tiles=tls, interpret=interpret)
     return out[:m, :n]
+
+
+def _coerce_bitmaps(r_in, s_in, universe):
+    if r_in.dtype != jnp.uint32:
+        assert universe is not None, "universe required to pack element lists"
+        r_in = _pack_bitmaps(r_in, universe)
+    if s_in.dtype != jnp.uint32:
+        assert universe is not None
+        s_in = _pack_bitmaps(s_in, universe)
+    W = max(r_in.shape[1], s_in.shape[1])
+    return _pad_to(r_in, 1, W), _pad_to(s_in, 1, W)
+
+
+# ---------------------------------------------------------------------- #
+# sparse pair emission (live-tile schedule + on-device compaction)
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "size"))
+def _compact_live(mask_tiles, tile_i, tile_j, *, tm, tn, size):
+    """(L, TM, TN) live-tile masks -> packed (size, 2) int32 global pairs.
+
+    Rows past the true pair count are (-1, -1). Padded rows/columns of the
+    operand arrays can never qualify (empty windows / col >= hi), so no
+    post-filter is needed.
+    """
+    l, r, c = jnp.nonzero(mask_tiles, size=size, fill_value=-1)
+    valid = l >= 0
+    rows = jnp.where(valid, tile_i[l] * tm + r, -1)
+    cols = jnp.where(valid, tile_j[l] * tn + c, -1)
+    return jnp.stack([rows, cols], axis=1)
+
+
+def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
+                lo, hi, t, tiles, interpret, capacity, stats):
+    interpret = _interpret_default() if interpret is None else interpret
+    rb, r_sz, sb, s_sz, lo_p, hi_p, tls, m, n = _pad_operands(
+        r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults)
+    TM, TN, _ = tls
+    m_tiles, n_tiles = rb.shape[0] // TM, sb.shape[0] // TN
+    ti, tj = _live_tiles(lo_p[:, 0], hi_p[:, 0], m_tiles, n_tiles, TM, TN)
+    L = len(ti)
+    if stats is not None:
+        stats["live_tiles"] = L
+        stats["total_tiles"] = m_tiles * n_tiles
+        stats["dense_mask_bytes"] = m * n
+    if L == 0:
+        if stats is not None:
+            stats.update(pair_count=0, pair_bytes=0, counts_bytes=0,
+                         output_bytes=0, regrows=0)
+        return jnp.zeros((0, 2), jnp.int32), 0
+
+    masks, counts = live_fn(jnp.asarray(ti), jnp.asarray(tj), rb, r_sz,
+                            sb, s_sz, lo_p, hi_p, t=t, tiles=tls,
+                            interpret=interpret)
+    # per-tile counts are exact even when a capacity hint is too small:
+    # they tell us the regrown capacity without a second kernel pass.
+    counts_np = np.asarray(counts)[:, 0]
+    total = int(counts_np.sum())
+    cap = round_capacity(total if capacity is None else capacity)
+    regrows = 0
+    if cap < total:  # overflow: regrow to the exact requirement, recompact
+        cap = round_capacity(total)
+        regrows += 1
+    pairs = (_compact_live(masks, jnp.asarray(ti), jnp.asarray(tj),
+                           tm=TM, tn=TN, size=cap)
+             if cap else jnp.zeros((0, 2), jnp.int32))
+    if stats is not None:
+        stats["pair_count"] = total
+        stats["pair_bytes"] = cap * 8          # what the packed array ships
+        stats["counts_bytes"] = L * 4          # per-tile count transfer
+        stats["output_bytes"] = cap * 8 + L * 4
+        stats["regrows"] = regrows
+    return pairs, total
+
+
+def bitmap_join_pairs(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
+                      t: float, tiles=None, interpret: bool | None = None,
+                      capacity: int | None = None, stats: dict | None = None):
+    """Sparse popcount join -> (pairs (P, 2) int32 device array, n_pairs).
+
+    ``pairs[:n_pairs]`` are the qualifying (row, col) indices into the
+    unpadded operands; later rows are (-1, -1) capacity padding. P is
+    ``capacity`` rounded up (regrown automatically on overflow — the
+    per-tile counts make the retry exact, never a second kernel pass).
+    """
+    return _join_pairs(_bj.bitmap_join_live_tiled, _bj.DEFAULT_TILES,
+                       r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
+                       t, tiles, interpret, capacity, stats)
+
+
+def onehot_join_pairs(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo,
+                      hi, t: float, universe: int | None = None, tiles=None,
+                      interpret: bool | None = None,
+                      capacity: int | None = None, stats: dict | None = None):
+    """Sparse MXU join; same contract as ``bitmap_join_pairs``."""
+    r_in, s_in = _coerce_bitmaps(r_bitmaps_or_padded, s_bitmaps, universe)
+    return _join_pairs(_oj.onehot_join_live_tiled, _oj.DEFAULT_TILES,
+                       r_in, r_sizes, s_in, s_sizes, lo, hi,
+                       t, tiles, interpret, capacity, stats)
+
+
+def join_pairs(method: str, *args, **kw):
+    """Dispatch sparse emission by kernel family ('bitmap' | 'onehot')."""
+    if method == "bitmap":
+        return bitmap_join_pairs(*args, **kw)
+    if method == "onehot":
+        return onehot_join_pairs(*args, **kw)
+    raise ValueError(f"unknown pair-emission method {method!r}")
 
 
 def flash_attention(q, k, v, window=None, blocks=None, interpret=None):

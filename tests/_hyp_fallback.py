@@ -1,0 +1,84 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The tier-1 suite must collect and run on a clean environment
+(requirements-dev.txt installs the real thing). This vendored fallback
+implements just the surface the tests use — ``given``, ``settings`` and
+the ``lists`` / ``integers`` / ``sampled_from`` strategies — as a seeded
+random-case generator: deterministic per test (seeded by the test name),
+no shrinking, no database.
+
+Usage in tests:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from tests._hyp_fallback import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 30
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class st:
+    """Namespace mirroring ``hypothesis.strategies`` (subset)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(size)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+
+strategies = st
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Record max_examples on the (already-wrapped) test function."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**named_strategies):
+    """Run the test body over ``max_examples`` seeded random draws."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in named_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+        # hide the drawn parameters from pytest's fixture resolution
+        # (real hypothesis does the equivalent via its pytest plugin)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -39,7 +39,8 @@ def test_collective_parser_on_real_module():
     def f(x):
         return jax.lax.psum(x, "data")
 
-    sm = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+    from repro.core.distributed import shard_map
+    sm = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
     n = mesh.shape["data"]
     x = jax.ShapeDtypeStruct((n, 64), jnp.float32,
                              sharding=NamedSharding(mesh, P("data")))

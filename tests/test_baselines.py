@@ -1,7 +1,10 @@
 """Baseline (candidate-based) joins must equal the brute-force oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
 
 from repro.core.baselines import (allpairs_join, fasttelp_sj, fs_join,
                                   mr_rp_ppjoin, ppjoin_join)

@@ -5,7 +5,10 @@ import sys
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
 
 from repro.core.distributed import mr_cf_rs_join
 from repro.core.join import brute_force_join

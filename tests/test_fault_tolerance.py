@@ -166,8 +166,12 @@ def body(xs, err):
     out, new_err = compressed_psum(xs[0], "data", err[0])
     return out[None], new_err[None]
 
-f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
-                          out_specs=(P("data"), P("data"))))
+try:
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                      out_specs=(P("data"), P("data"))))
 err = jnp.zeros_like(x)
 exact = np.asarray(x).mean(0)
 # single shot: quantization error bounded by scale/2 per rank

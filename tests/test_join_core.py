@@ -1,7 +1,10 @@
 """Core join correctness: paper worked example + oracle equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
 
 from repro.core.fvt import FVT, LFVT, build_seqs
 from repro.core.join import brute_force_join, cf_rs_join_fvt, cf_rs_join_lfvt

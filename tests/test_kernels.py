@@ -7,7 +7,10 @@ against the float64 brute-force join.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
 
 from repro.core.join import brute_force_join
 from repro.core.sets import SetCollection
