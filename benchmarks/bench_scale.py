@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from repro.core.distributed import mr_cf_rs_join
 from repro.core.partition import load_aware_partition, route
-from repro.data.synth import make_join_dataset
+from repro.data.synth import make_join_dataset, make_skew_dataset
 
 from .common import emit, timed
 
@@ -36,6 +36,21 @@ def main() -> dict:
         emit(f"cluster/livej/shards{shards}", secs,
              f"model_speedup={speedup:.2f};max_load={stats['max_load']}")
         out[("livej-shards", shards)] = speedup
+    # shard-skew sweep (DESIGN.md §7): Zipfian set sizes stress one shard;
+    # wall time + resident reduce-mask memory for hash vs load-aware
+    # routing under global-max vs bucketed shard packing
+    R, S = make_skew_dataset(500, 1200, a=1.4, seed=11)
+    for strategy in ("hash", "load_aware"):
+        for pad in ("global", "bucket"):
+            st: dict = {}
+            _, secs = timed(mr_cf_rs_join, R, S, T, 8, strategy=strategy,
+                            pad=pad, stats=st)
+            emit(f"skew/{strategy}/{pad}", secs,
+                 f"mask_peak={st['reduce_mask_peak_bytes']}"
+                 f";reduce_bytes={st['reduce_bytes']}"
+                 f";pad_waste={st['pad_waste_mean']:.3f}"
+                 f";max_load={st['max_load']}")
+            out[("skew", strategy, pad)] = secs
     return out
 
 

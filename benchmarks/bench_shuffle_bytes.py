@@ -5,26 +5,36 @@ The paper's mechanism: MR-CF routes each S set once + R sets a few times
 per prefix token and FS-Join re-emits per-segment partials. We count the
 exact bytes each algorithm ships.
 
-Also reports the reduce-output side (DESIGN.md §6): result density and
-the bytes the join result actually moves — compacted (r, s) pairs vs the
-dense per-shard boolean masks the pre-sparse pipeline shipped.
+Also reports the reduce-output side (DESIGN.md §6-7): result density,
+the bytes the join result actually moves — per-shard compacted pair
+buffers vs the dense per-shard boolean masks — and a shard-skew sweep
+(Zipfian set sizes) comparing hash vs load-aware partitioning under
+global-max vs bucketed shard packing (reduce bytes, peak resident mask,
+padding waste).
+
+CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]``
+— ``--smoke`` runs a tiny single-dataset sweep (CI); ``--out`` writes the
+result dict as JSON (the BENCH artifact).
 """
 from __future__ import annotations
 
 from repro.core.baselines import fs_join, mr_rp_ppjoin
 from repro.core.distributed import mr_cf_rs_join
-from repro.data.synth import make_join_dataset
+from repro.data.synth import make_join_dataset, make_skew_dataset
 
 from .common import emit
 
 SHARDS = 8
 
 
-def main() -> dict:
+def table3_sweep(smoke: bool = False) -> dict:
     out = {}
-    for ds in ("dblp", "kosarak", "enron", "querylog"):
-        R, S = make_join_dataset(ds, scale=0.06, seed=4)
-        for t in (0.875, 0.375):  # dyadic analogues of the paper sweep
+    datasets = ("dblp",) if smoke else ("dblp", "kosarak", "enron", "querylog")
+    scale = 0.01 if smoke else 0.06
+    thresholds = (0.875,) if smoke else (0.875, 0.375)
+    for ds in datasets:
+        R, S = make_join_dataset(ds, scale=scale, seed=4)
+        for t in thresholds:  # dyadic analogues of the paper sweep
             ours_stats: dict = {}
             mr_cf_rs_join(R, S, t, SHARDS, stats=ours_stats)
             pp_stats: dict = {}
@@ -44,7 +54,8 @@ def main() -> dict:
                  f";density={density:.2e}"
                  f";pair_bytes={ours_stats['pair_bytes']}"
                  f";compacted_bytes={ours_stats['reduce_bytes']}"
-                 f";dense_mask_bytes={dense}")
+                 f";dense_mask_bytes={dense}"
+                 f";mask_peak={ours_stats['reduce_mask_peak_bytes']}")
             out[(ds, t)] = {
                 "mr_cf": ours_stats["shuffle_bytes"],
                 "rp_ppjoin": pp_stats["shuffle_bytes"],
@@ -53,9 +64,75 @@ def main() -> dict:
                 "result_density": density,
                 "reduce_bytes_compacted": ours_stats["reduce_bytes"],
                 "reduce_bytes_dense": dense,
+                "reduce_mask_peak_bytes":
+                    ours_stats["reduce_mask_peak_bytes"],
             }
     return out
 
 
+def skew_sweep(smoke: bool = False) -> dict:
+    """Shard-skew sweep: Zipfian set sizes, hash vs load-aware routing,
+    global-max vs bucketed shard packing.
+
+    Reports, per configuration: shard-sparse reduce bytes (compacted
+    per-shard buffers) vs the dense-mask reduce bytes, the peak resident
+    reduce mask (one shard for emit='pairs', the whole stack for the
+    dense fallback), and per-shard padding waste.
+    """
+    out = {}
+    n = 120 if smoke else 600
+    universe = 400 if smoke else 1500
+    R, S = make_skew_dataset(n, universe, a=1.4, seed=7)
+    t = 0.5
+    for strategy in ("hash", "load_aware"):
+        for pad in ("global", "bucket"):
+            sp: dict = {}
+            mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
+                          stats=sp)
+            dm: dict = {}
+            mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
+                          emit="mask", stats=dm)
+            emit(f"skew/{strategy}/{pad}", 0.0,
+                 f"pairs={sp['result_pairs']}"
+                 f";reduce_sparse={sp['reduce_bytes']}"
+                 f";reduce_dense={dm['reduce_bytes']}"
+                 f";mask_peak_sparse={sp['reduce_mask_peak_bytes']}"
+                 f";mask_peak_dense={dm['reduce_mask_peak_bytes']}"
+                 f";pad_waste_mean={sp['pad_waste_mean']:.3f}"
+                 f";pad_waste_max={sp['pad_waste_max']:.3f}"
+                 f";max_load={sp['max_load']}")
+            out[("skew", strategy, pad)] = {
+                "result_pairs": sp["result_pairs"],
+                "reduce_bytes_sparse": sp["reduce_bytes"],
+                "reduce_bytes_dense": dm["reduce_bytes"],
+                "mask_peak_sparse": sp["reduce_mask_peak_bytes"],
+                "mask_peak_dense": dm["reduce_mask_peak_bytes"],
+                "pad_waste_mean": sp["pad_waste_mean"],
+                "pad_waste_max": sp["pad_waste_max"],
+                "max_load": sp["max_load"],
+            }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    out = table3_sweep(smoke)
+    out.update(skew_sweep(smoke))
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny single-dataset sweep (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write results as JSON to this path")
+    args = ap.parse_args()
+    res = main(smoke=args.smoke)
+    if args.out:
+        flat = {"/".join(map(str, k)): v for k, v in res.items()}
+        with open(args.out, "w") as fh:
+            json.dump(flat, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")

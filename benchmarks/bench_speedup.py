@@ -44,7 +44,7 @@ def main() -> dict:
                  f"single_s={t_single:.3f};ratio={ratio:.2f}")
             emit(f"memory/{ds}/frac{frac}/t{t}", 0.0,
                  f"tree_bytes={_tree_bytes(tree)};"
-                 f"shard_bytes={stats['shard_block_bytes']}")
+                 f"shard_bytes={stats['shard_block_bytes_per_shard']}")
             out[(ds, frac, t)] = ratio
     return out
 

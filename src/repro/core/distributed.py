@@ -1,21 +1,28 @@
 """MR-CF-RS-Join: the paper's single MapReduce job as a JAX SPMD program.
 
-Mapping (DESIGN.md §2):
+Mapping (DESIGN.md §2, §7):
   map     -> host routing via ``core.partition`` (length-range, Eq. 2-3)
   shuffle -> the sharded device layout itself; bytes counted exactly
-  reduce  -> per-shard candidate-free tile join under ``shard_map``;
-             shard-local results are compacted on device into
-             variable-length pair buffers (DESIGN.md §6), so reduce
-             output bytes count compacted pairs, not dense masks
+  reduce  -> per-shard candidate-free tile join; with ``emit='pairs'``
+             compaction happens *inside* the shard-local body (under
+             ``shard_map`` on the mesh path), so each shard ships only a
+             fixed-capacity ``(cap, 2)`` pair buffer plus an exact count —
+             the dense ``(n_shards, m_max, n_max)`` mask stack never
+             exists (DESIGN.md §7).
 
 Two execution paths share the same shard-local compute:
   * ``shard_map``: one shard per device along the mesh ``data`` axis
     (optionally x ``pod`` for a second R split) — the production path.
   * ``loop``: sequential shard loop on one device — used by CPU benchmarks,
     which report the exact per-shard load model the paper plots (Fig. 8).
+    The loop path additionally supports *bucketed* shard packing: shards
+    are grouped by power-of-two (m, n) footprint and each bucket is padded
+    only to its own maxima, so one skewed shard no longer inflates every
+    shard's memory and compute.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -30,10 +37,10 @@ except ImportError:  # pragma: no cover - older jax
 
 from .partition import Partitioning, hash_partition, load_aware_partition, route
 from .sets import SetCollection
-from .tile_join import (_compact_mask, _mask_total, popcount_counts, qualify,
+from .tile_join import (PAIR_CAP_GRAIN, popcount_counts, qualify,
                         round_capacity, window_bounds)
 
-__all__ = ["mr_cf_rs_join", "shard_blocks", "local_join_mask"]
+__all__ = ["mr_cf_rs_join", "shard_blocks", "local_join_mask", "ShardBlock"]
 
 
 # ---------------------------------------------------------------------- #
@@ -53,53 +60,158 @@ def local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t: float,
 
 
 # ---------------------------------------------------------------------- #
-# host map phase: routing + dense shard blocks
+# host map phase: routing + vectorized, bucket-padded shard blocks
 # ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ShardBlock:
+    """One bucket of shards padded to a common (m_pad, n_pad).
+
+    ``arrays`` stacks (r_bm, r_sz, s_bm, s_sz, lo, hi) along a leading
+    shard axis of length ``len(shard_ids)``; ``r_ids``/``s_ids`` map packed
+    rows/columns back to original set ids (-1 = padding).
+    """
+
+    shard_ids: np.ndarray  # (K,) global shard indices in this bucket
+    arrays: tuple          # (r_bm, r_sz, s_bm, s_sz, lo, hi), leading dim K
+    r_ids: np.ndarray      # (K, m_pad) int64
+    s_ids: np.ndarray      # (K, n_pad) int64
+
+    @property
+    def n_local(self) -> int:
+        return len(self.shard_ids)
+
+    @property
+    def m_pad(self) -> int:
+        return self.r_ids.shape[1]
+
+    @property
+    def n_pad(self) -> int:
+        return self.s_ids.shape[1]
+
+    def block_bytes(self) -> int:
+        return int(self.arrays[0].nbytes + self.arrays[2].nbytes)
+
+
+def _ceil_pow2(x: int) -> int:
+    return 1 << (int(max(x, 1)) - 1).bit_length()
+
+
+def _flatten_routes(rows_per_shard):
+    """Per-shard row lists -> (rows, shard_of, pos_in_shard) flat arrays."""
+    counts = np.asarray([len(g) for g in rows_per_shard], dtype=np.int64)
+    rows = (np.concatenate([np.asarray(g, dtype=np.int64)
+                            for g in rows_per_shard])
+            if counts.sum() else np.zeros(0, np.int64))
+    shard_of = np.repeat(np.arange(len(rows_per_shard), dtype=np.int64),
+                         counts)
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    pos = np.arange(len(rows), dtype=np.int64) - starts[shard_of]
+    return rows, shard_of, pos, counts
+
+
+def _pack_side(rows, shard_of, pos, local_of_shard, K, pad, all_bm, sizes,
+               ids):
+    """Gather/scatter one side's flat routed rows into stacked block arrays."""
+    W = all_bm.shape[1]
+    bm = np.zeros((K, pad, W), np.uint32)
+    sz = np.zeros((K, pad), np.int32)
+    out_ids = np.full((K, pad), -1, np.int64)
+    sel = local_of_shard[shard_of] >= 0
+    if sel.any():
+        k = local_of_shard[shard_of[sel]]
+        p = pos[sel]
+        r = rows[sel]
+        bm[k, p] = all_bm[r]
+        sz[k, p] = sizes[r]
+        out_ids[k, p] = ids[r]
+    return bm, sz, out_ids
+
+
 def shard_blocks(R: SetCollection, S: SetCollection, part: Partitioning,
-                 t: float):
-    """Build stacked, padded per-shard arrays (the post-shuffle layout)."""
+                 t: float, pad: str = "global"):
+    """Build the post-shuffle layout: stacked, padded per-shard arrays.
+
+    pad: 'global' — every shard padded to the global (m_max, n_max); one
+         ``ShardBlock`` covering all shards (required by ``shard_map``).
+         'bucket' — shards grouped by power-of-two (m, n) footprint; each
+         bucket padded to its own bucket maxima, so a skewed shard only
+         inflates its bucket (paper Eq. 2-3 skew pathology).
+
+    Returns ``(blocks, stats)`` where blocks is a list of ``ShardBlock``.
+    Packing is vectorized: per-shard S rows are ordered by one global
+    lexsort (shard, size desc, id asc) and all bitmaps/sizes/ids land via
+    single fancy-index scatters — no per-shard Python packing loop.
+    """
+    if pad not in ("global", "bucket"):
+        raise ValueError(f"unknown pad mode {pad!r}")
     s_rows, r_rows, stats = route(R, S, part)
     n_shards = part.n_shards
     universe = max(R.universe, S.universe)
     W = max((universe + 31) // 32, 1)
-    m_max = max(1, max((len(x) for x in r_rows), default=1))
-    n_max = max(1, max((len(x) for x in s_rows), default=1))
+    all_r_bm, all_s_bm = R.bitmaps(W), S.bitmaps(W)
+    r_sizes, s_sizes = R.sizes(), S.sizes()
 
-    r_bm = np.zeros((n_shards, m_max, W), np.uint32)
-    s_bm = np.zeros((n_shards, n_max, W), np.uint32)
-    r_sz = np.zeros((n_shards, m_max), np.int32)
-    s_sz = np.zeros((n_shards, n_max), np.int32)
-    lo = np.zeros((n_shards, m_max), np.int32)
-    hi = np.zeros((n_shards, m_max), np.int32)
-    r_ids = np.full((n_shards, m_max), -1, np.int64)
-    s_ids = np.full((n_shards, n_max), -1, np.int64)
+    sf, s_shard, s_pos, n_k = _flatten_routes(s_rows)
+    rf, r_shard, r_pos, m_k = _flatten_routes(r_rows)
+    # FVT root-ward invariant per shard: S rows by (size desc, id asc),
+    # grouped by shard — one stable lexsort instead of per-shard sorts
+    order = np.lexsort((S.ids[sf], -s_sizes[sf].astype(np.int64), s_shard))
+    sf = sf[order]
 
-    for k in range(n_shards):
-        if s_rows[k]:
-            sub = SetCollection([S.sets[i] for i in s_rows[k]], universe,
-                                S.ids[s_rows[k]]).sort_by_size()
-            ns = len(sub)
-            s_bm[k, :ns] = sub.bitmaps(W)
-            s_sz[k, :ns] = sub.sizes()
-            s_ids[k, :ns] = sub.ids
-        if r_rows[k]:
-            subr = SetCollection([R.sets[i] for i in r_rows[k]], universe,
-                                 R.ids[r_rows[k]])
-            mr = len(subr)
-            r_bm[k, :mr] = subr.bitmaps(W)
-            sizes = subr.sizes()
-            r_sz[k, :mr] = sizes
-            r_ids[k, :mr] = subr.ids
-            if s_rows[k]:
-                l, h = window_bounds(sizes, s_sz[k, : len(s_rows[k])], t)
-                lo[k, :mr] = l
-                hi[k, :mr] = h
-    stats["shard_block_bytes"] = int(r_bm.nbytes + s_bm.nbytes) // n_shards
-    return (r_bm, r_sz, s_bm, s_sz, lo, hi), (r_ids, s_ids), stats
+    if pad == "bucket":
+        keys = [(_ceil_pow2(int(m_k[k])), _ceil_pow2(int(n_k[k])))
+                for k in range(n_shards)]
+        buckets: dict[tuple[int, int], list[int]] = {}
+        for k, key in enumerate(keys):
+            buckets.setdefault(key, []).append(k)
+        # the pow-2 key only groups; each bucket pads to its own maxima,
+        # so bucketed padding never exceeds the global-max packing
+        groups = [(ids := np.asarray(v, np.int64),
+                   max(1, int(m_k[ids].max())), max(1, int(n_k[ids].max())))
+                  for v in (buckets[key] for key in sorted(buckets))]
+    else:
+        groups = [(np.arange(n_shards, dtype=np.int64),
+                   max(1, int(m_k.max(initial=1))),
+                   max(1, int(n_k.max(initial=1))))]
+
+    blocks: list[ShardBlock] = []
+    alloc_rows = np.ones(n_shards, np.float64)
+    for shard_ids, m_pad, n_pad in groups:
+        alloc_rows[shard_ids] = m_pad + n_pad
+        K = len(shard_ids)
+        local = np.full(n_shards, -1, np.int64)
+        local[shard_ids] = np.arange(K)
+        s_bm, s_sz, s_ids = _pack_side(sf, s_shard, s_pos, local, K, n_pad,
+                                       all_s_bm, s_sizes, S.ids)
+        r_bm, r_sz, r_ids = _pack_side(rf, r_shard, r_pos, local, K, m_pad,
+                                       all_r_bm, r_sizes, R.ids)
+        lo = np.zeros((K, m_pad), np.int32)
+        hi = np.zeros((K, m_pad), np.int32)
+        for lk, k in enumerate(shard_ids):
+            mk, nk = int(m_k[k]), int(n_k[k])
+            if mk and nk:
+                l, h = window_bounds(r_sz[lk, :mk], s_sz[lk, :nk], t)
+                lo[lk, :mk] = l
+                hi[lk, :mk] = h
+        blocks.append(ShardBlock(shard_ids, (r_bm, r_sz, s_bm, s_sz, lo, hi),
+                                 r_ids, s_ids))
+
+    # packing stats: exact bytes + per-shard padding waste (fraction of
+    # allocated bitmap rows that are padding)
+    used_rows = (m_k + n_k).astype(np.float64)
+    waste = 1.0 - used_rows / np.maximum(alloc_rows, 1.0)
+    stats["shard_block_bytes"] = sum(b.block_bytes() for b in blocks)
+    stats["shard_block_bytes_per_shard"] = (
+        stats["shard_block_bytes"] / max(n_shards, 1))
+    stats["pad_waste_max"] = float(waste.max(initial=0.0))
+    stats["pad_waste_mean"] = float(waste.mean()) if n_shards else 0.0
+    stats["pad"] = pad
+    stats["n_buckets"] = len(blocks)
+    return blocks, stats
 
 
 # ---------------------------------------------------------------------- #
-# reduce phase
+# reduce phase — dense-mask fallback (emit='mask')
 # ---------------------------------------------------------------------- #
 @functools.partial(jax.jit, static_argnames=("t", "method"))
 def _loop_reduce(blocks, *, t: float, method: str):
@@ -109,75 +221,305 @@ def _loop_reduce(blocks, *, t: float, method: str):
     return jax.lax.map(per_shard, blocks)
 
 
-def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str):
+@functools.lru_cache(maxsize=64)
+def _shard_map_mask_fn(mesh: Mesh, axis: str, t: float, method: str):
+    """Jitted shard_map dense reduce, cached so repeated calls on the same
+    mesh hit the jit cache instead of retracing (meshes are few and
+    long-lived; the bounded cache holds them strongly)."""
     spec = P(axis)
     def body(r_bm, r_sz, s_bm, s_sz, lo, hi):
         mask = local_join_mask(r_bm[0], r_sz[0], s_bm[0], s_sz[0],
                                lo[0], hi[0], t, method)
         return mask[None]
-    fn = shard_map(body, mesh=mesh, in_specs=(spec,) * 6, out_specs=spec)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 6,
+                             out_specs=spec))
+
+
+def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str):
+    spec = P(axis)
     placed = tuple(
         jax.device_put(jnp.asarray(b), NamedSharding(mesh, spec)) for b in blocks
     )
-    return jax.jit(fn)(*placed)
+    return _shard_map_mask_fn(mesh, axis, t, method)(*placed)
+
+
+# ---------------------------------------------------------------------- #
+# reduce phase — shard-sparse (emit='pairs'): compaction inside the
+# shard-local body; only (cap, 2) buffers + counts leave a shard
+# ---------------------------------------------------------------------- #
+def _shard_pairs_body(mask, cap: int):
+    """In-shard compaction: (m, n) bool mask -> ((cap, 2) int32 pairs,
+    exact int32 count). The count is exact even when ``nonzero`` truncates
+    at ``cap`` — the regrow protocol depends on that."""
+    count = jnp.sum(mask, dtype=jnp.int32)
+    rr, cc = jnp.nonzero(mask, size=cap, fill_value=-1)
+    return jnp.stack([rr, cc], axis=1).astype(jnp.int32), count
+
+
+@functools.partial(jax.jit, static_argnames=("t", "method", "cap"))
+def _loop_reduce_pairs(arrays, *, t: float, method: str, cap: int):
+    """lax.map over shards -> ((K, cap, 2) int32 pairs, (K,) int32 counts).
+
+    The per-shard dense mask exists only inside the map body (one shard at
+    a time); the stacked output is already compacted.
+    """
+    def per_shard(args):
+        r_bm, r_sz, s_bm, s_sz, lo, hi = args
+        mask = local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method)
+        return _shard_pairs_body(mask, cap)
+    return jax.lax.map(per_shard, arrays)
+
+
+@functools.lru_cache(maxsize=64)
+def _shard_map_pairs_fn(mesh: Mesh, axis: str, t: float, method: str,
+                        cap: int):
+    """Jitted shard_map shard-sparse reduce, cached per (mesh, axis, t,
+    method, cap) — repeated joins (the dedup pipeline) and regrow retries
+    reuse the compiled executable instead of retracing."""
+    spec = P(axis)
+    def body(r_bm, r_sz, s_bm, s_sz, lo, hi):
+        mask = local_join_mask(r_bm[0], r_sz[0], s_bm[0], s_sz[0],
+                               lo[0], hi[0], t, method)
+        pairs, count = _shard_pairs_body(mask, cap)
+        return pairs[None], count[None]
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 6,
+                             out_specs=(spec, spec)))
+
+
+def _shard_map_reduce_pairs(placed, mesh: Mesh, axis: str, *, t: float,
+                            method: str, cap: int):
+    """shard_map reduce with in-shard compaction: each device computes its
+    own shard's mask, counts it, and packs qualifying (row, col) pairs into
+    a fixed-capacity buffer — the all-gathered output is (n_shards, cap, 2)
+    + (n_shards,) counts, never the dense mask stack.
+
+    ``placed`` must already be device_put with the shard sharding (the
+    regrow retry then re-runs only the compute, not the upload)."""
+    return _shard_map_pairs_fn(mesh, axis, t, method, cap)(*placed)
+
+
+def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
+                        cap_hint: int, mesh: Mesh | None, axis: str):
+    """Run the shard-sparse reduce for one bucket with the power-of-two
+    regrow protocol: per-shard counts are exact, so an overflow regrows the
+    capacity in one step and reruns at most once.
+
+    Returns (pairs (K, cap, 2) device array, counts (K,) np, cap, regrows);
+    the caller transfers only each shard's ``[:count]`` slice.
+    """
+    cap = round_capacity(max(cap_hint, 1))
+    regrows = 0
+    if mesh is not None:  # upload once; regrow retries reuse the placement
+        spec = P(axis)
+        placed = tuple(
+            jax.device_put(jnp.asarray(a), NamedSharding(mesh, spec))
+            for a in block.arrays)
+    else:
+        placed = tuple(jnp.asarray(a) for a in block.arrays)
+    while True:
+        if mesh is not None:
+            pairs_dev, counts_dev = _shard_map_reduce_pairs(
+                placed, mesh, axis, t=t, method=method, cap=cap)
+        else:
+            pairs_dev, counts_dev = _loop_reduce_pairs(
+                placed, t=t, method=method, cap=cap)
+        counts = np.asarray(counts_dev).reshape(-1)
+        mx = int(counts.max(initial=0))
+        if mx <= cap:
+            return pairs_dev, counts, cap, regrows
+        cap = round_capacity(mx)
+        regrows += 1
+
+
+def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
+                        cap_hint: int):
+    """Per-shard live-tiled kernel reduce (loop path, kernel methods).
+
+    Reuses the §6 live-tile schedule shard by shard: each shard's
+    qualifying mask is computed tile-by-tile with skipped tiles costing
+    zero grid steps, and compacted on device into its own pair buffer.
+    Shards stream double-buffered (shard k+1 dispatched before shard k's
+    count syncs) so at most two shards' staged tile masks are resident.
+    Returns (list of (n_k, 2) np pair arrays, counts, output_bytes,
+    regrows, live_tiles, total_tiles, staged_mask_peak_bytes).
+    """
+    from repro.kernels import ops as kops
+    dispatch = (kops.bitmap_join_pairs_dispatch if method == "kernel_bitmap"
+                else kops.onehot_join_pairs_dispatch)
+    r_bm, r_sz, s_bm, s_sz, lo, hi = block.arrays
+    per_shard, counts = [], []
+    acc = {"out_bytes": 0, "regrows": 0, "live": 0, "total": 0}
+
+    def settle(pending):
+        kstats: dict = {}
+        pp, n = kops.join_pairs_finalize(pending, capacity=cap_hint,
+                                         stats=kstats)
+        per_shard.append(np.asarray(pp[:n]))  # device slice: ship n rows
+        counts.append(n)
+        acc["out_bytes"] += 8 * n + 4 + kstats.get("counts_bytes", 0)
+        acc["regrows"] += kstats.get("regrows", 0)
+        acc["live"] += kstats.get("live_tiles", 0)
+        acc["total"] += kstats.get("total_tiles", 0)
+
+    in_flight = None
+    staged_sizes = []  # per-shard (L, TM, TN) staged live-tile mask bytes
+    for lk in range(block.n_local):
+        cur = dispatch(jnp.asarray(r_bm[lk]), jnp.asarray(r_sz[lk]),
+                       jnp.asarray(s_bm[lk]), jnp.asarray(s_sz[lk]),
+                       jnp.asarray(lo[lk]), jnp.asarray(hi[lk]), t)
+        staged_sizes.append(cur.live_tiles * cur.tm * cur.tn)
+        if in_flight is not None:
+            settle(in_flight)
+        in_flight = cur
+    if in_flight is not None:
+        settle(in_flight)
+    # double-buffering keeps at most two consecutive shards' staged masks
+    # resident at once
+    staged_peak = max(
+        (staged_sizes[i] + (staged_sizes[i + 1] if i + 1 < len(staged_sizes)
+                            else 0) for i in range(len(staged_sizes))),
+        default=0)
+    return (per_shard, np.asarray(counts), acc["out_bytes"], acc["regrows"],
+            acc["live"], acc["total"], staged_peak)
+
+
+def _emit_shard_pairs(block: ShardBlock, lk: int, local: np.ndarray,
+                      out: set) -> None:
+    """Map one shard's packed (row, col) indices back to original ids."""
+    if not len(local):
+        return
+    rid = block.r_ids[lk, local[:, 0]]
+    sid = block.s_ids[lk, local[:, 1]]
+    keep = (rid >= 0) & (sid >= 0)  # belt: padding can't qualify
+    out.update(zip(map(int, rid[keep]), map(int, sid[keep])))
+
+
+def _collect_block_pairs(block: ShardBlock, pairs_dev,
+                         counts: np.ndarray, out: set) -> None:
+    """Transfer each shard's variable-length pair slice and map the packed
+    (row, col) indices back to original ids.
+
+    Only ``pairs_dev[k, :counts[k]]`` ever crosses the host boundary —
+    the cap-sized buffer stays device-resident (reduce output bytes are
+    ``8·n_k + 4`` per shard, the Fig. 8 model)."""
+    for lk in range(len(counts)):
+        c = int(counts[lk])
+        if c:
+            _emit_shard_pairs(block, lk, np.asarray(pairs_dev[lk, :c]), out)
 
 
 def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                   n_shards: int, strategy: str = "load_aware",
                   method: str = "popcount", mesh: Mesh | None = None,
                   axis: str = "data", stats: dict | None = None,
-                  emit: str = "pairs") -> set:
+                  emit: str = "pairs", pad: str = "auto",
+                  pair_capacity: int | None = None) -> set:
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
     mesh:     if given, reduce runs under shard_map on ``axis`` (whose size
               must equal ``n_shards``); otherwise a sequential shard loop.
-    emit:     'pairs' (default) — shard-local results are compacted on
-              device into variable-length pair buffers; only the packed
-              (shard, row, col) triples cross the host boundary and
-              ``reduce_bytes`` counts compacted pairs (the paper's Fig. 8
+    emit:     'pairs' (default) — compaction happens inside the shard-local
+              body: each shard ships a fixed-capacity (cap, 2) pair buffer
+              + exact count (regrown on overflow, power-of-two protocol);
+              the dense (n_shards, m_max, n_max) stack is never built and
+              ``reduce_bytes`` counts compacted buffers (the paper's Fig. 8
               model). 'mask' — dense fallback: every per-shard boolean
               mask is transferred and scanned on host.
+    pad:      'auto' (bucket on the loop path, global under shard_map) |
+              'global' | 'bucket' — see ``shard_blocks``.
+    pair_capacity: initial per-shard pair-buffer capacity hint for
+              emit='pairs'; regrown automatically on overflow.
     """
     if emit not in ("pairs", "mask"):
         raise ValueError(f"unknown emit mode {emit!r}")
+    if pad not in ("auto", "global", "bucket"):
+        raise ValueError(f"unknown pad mode {pad!r}")
     if not len(R) or not len(S):
+        if stats is not None:  # consumers index these unconditionally
+            stats.update(
+                n_shards=0, emit=emit, result_pairs=0, pair_bytes=0,
+                reduce_bytes=0, dense_mask_bytes=0, regrows=0,
+                reduce_intermediate_peak_bytes=0, reduce_mask_peak_bytes=0,
+                shuffle_bytes=0, shard_loads=[], max_load=0,
+                r_replication=0.0, shard_block_bytes=0,
+                shard_block_bytes_per_shard=0.0, pad_waste_max=0.0,
+                pad_waste_mean=0.0, pad=pad, n_buckets=0, intervals=[],
+                psi=0.0)
         return set()
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
         R, S, t, n_shards)
-    blocks, (r_ids, s_ids), route_stats = shard_blocks(R, S, part, t)
+    pad_mode = pad if pad != "auto" else ("global" if mesh is not None
+                                          else "bucket")
+    if mesh is not None and pad_mode != "global":
+        raise ValueError("shard_map path requires pad='global'")
+    blocks, route_stats = shard_blocks(R, S, part, t, pad=pad_mode)
     if mesh is not None:
         assert mesh.shape[axis] == part.n_shards, (mesh.shape, part.n_shards)
-        masks_dev = _shard_map_reduce(blocks, mesh, axis, t=t, method=method)
-    else:
-        masks_dev = _loop_reduce(tuple(jnp.asarray(b) for b in blocks),
-                                 t=t, method=method)
+
     pairs: set = set()
-    dense_bytes = int(np.prod(masks_dev.shape))
-    if emit == "pairs":
-        # device-side compaction into the per-shard variable-length pair
-        # buffers (shard-major (shard, row, col) triples): ship one count
-        # + the packed array
-        total = int(_mask_total(masks_dev))
-        cap = round_capacity(total)
-        if cap:
-            triples = np.asarray(_compact_mask(masks_dev, size=cap))[:total]
-            rid = r_ids[triples[:, 0], triples[:, 1]]
-            sid = s_ids[triples[:, 0], triples[:, 2]]
-            keep = (rid >= 0) & (sid >= 0)  # belt: padding can't qualify
-            pairs.update(zip(map(int, rid[keep]), map(int, sid[keep])))
-        reduce_bytes = cap * 12 + 4
-        n_result = total
-    else:
-        masks = np.asarray(masks_dev)
-        for k in range(part.n_shards):
-            rr, ss = np.nonzero(masks[k])
-            pairs.update(
-                (int(r_ids[k, i]), int(s_ids[k, j]))
-                for i, j in zip(rr, ss)
-                if r_ids[k, i] >= 0 and s_ids[k, j] >= 0
-            )
-        reduce_bytes = dense_bytes
+    dense_bytes = sum(b.n_local * b.m_pad * b.n_pad for b in blocks)
+    reduce_bytes = 0
+    peak_intermediate = 0
+    peak_mask = 0
+    n_result = 0
+    regrows = 0
+    live = total_tiles = 0
+    cap_hint = pair_capacity if pair_capacity else PAIR_CAP_GRAIN
+    kernel_loop = (mesh is None and emit == "pairs"
+                   and method in ("kernel_bitmap", "kernel_onehot"))
+    for block in blocks:
+        if kernel_loop:
+            per_shard, counts, out_b, rg, lv, tt, staged = (
+                _kernel_block_pairs(block, t=t, method=method,
+                                    cap_hint=pair_capacity))
+            for lk, local in enumerate(per_shard):
+                _emit_shard_pairs(block, lk, local, pairs)
+            reduce_bytes += out_b
+            regrows += rg
+            live += lv
+            total_tiles += tt
+            n_result += int(counts.sum())
+            # the staged (L, TM, TN) live-tile masks are what resides on
+            # device — tile padding can exceed the shard's m_pad*n_pad
+            peak_mask = max(peak_mask, staged)
+            peak_intermediate = max(peak_intermediate, staged)
+        elif emit == "pairs":
+            pairs_dev, counts, cap, rg = _block_pairs_reduce(
+                block, t=t, method=method, cap_hint=cap_hint,
+                mesh=mesh, axis=axis)
+            _collect_block_pairs(block, pairs_dev, counts, pairs)
+            # variable-length reduce output: each shard ships its exact
+            # slice + one count; the cap buffer never leaves the device
+            reduce_bytes += int(counts.sum()) * 8 + block.n_local * 4
+            regrows += rg
+            n_result += int(counts.sum())
+            # one shard-local mask (per map step / per device) + the
+            # compacted per-shard output buffers
+            peak_mask = max(peak_mask, block.m_pad * block.n_pad)
+            peak_intermediate = max(
+                peak_intermediate,
+                block.m_pad * block.n_pad + block.n_local * (cap * 8 + 4))
+        else:
+            if mesh is not None:
+                masks_dev = _shard_map_reduce(block.arrays, mesh, axis,
+                                              t=t, method=method)
+            else:
+                masks_dev = _loop_reduce(
+                    tuple(jnp.asarray(a) for a in block.arrays),
+                    t=t, method=method)
+            masks = np.asarray(masks_dev)
+            for lk in range(block.n_local):
+                rr, ss = np.nonzero(masks[lk])
+                pairs.update(
+                    (int(block.r_ids[lk, i]), int(block.s_ids[lk, j]))
+                    for i, j in zip(rr, ss)
+                    if block.r_ids[lk, i] >= 0 and block.s_ids[lk, j] >= 0
+                )
+            reduce_bytes += masks.size
+            peak_mask = max(peak_mask, masks.size)
+            peak_intermediate = max(peak_intermediate, masks.size)
+    if emit == "mask":
         n_result = len(pairs)
     if stats is not None:
         stats.update(route_stats)
@@ -192,4 +534,13 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         stats["pair_bytes"] = n_result * 8
         stats["reduce_bytes"] = reduce_bytes
         stats["dense_mask_bytes"] = dense_bytes
+        stats["reduce_intermediate_peak_bytes"] = peak_intermediate
+        # largest boolean mask ever resident at once: one shard's
+        # (m_pad, n_pad) for emit='pairs', the whole stacked bucket for
+        # emit='mask' — the assertion target for "no dense stack"
+        stats["reduce_mask_peak_bytes"] = peak_mask
+        stats["regrows"] = regrows
+        if kernel_loop:
+            stats["live_tiles"] = live
+            stats["total_tiles"] = total_tiles
     return pairs

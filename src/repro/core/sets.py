@@ -46,12 +46,27 @@ class SetCollection:
     ``__eq__`` would be meaningless over ragged ndarray lists anyway),
     which lets device-resident representations be cached per collection in
     a ``WeakKeyDictionary`` (see ``tile_join``).
+
+    Derived representations (``sizes``/``bitmaps``/``padded``/``csr``) are
+    memoized on the instance — collections are immutable by convention, and
+    both join drivers re-request the same rep for the same collection many
+    times. Cached arrays are returned write-protected.
     """
 
     sets: list[np.ndarray]
     universe: int
     ids: np.ndarray  # (n,) int32 original ids per row
     sorted_by_size: bool = False
+    _reps: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _memo(self, key, build):
+        out = self._reps.get(key)
+        if out is None:
+            out = build()
+            for a in out if isinstance(out, tuple) else (out,):
+                a.setflags(write=False)
+            self._reps[key] = out
+        return out
 
     # ------------------------------------------------------------------ #
     # constructors
@@ -84,16 +99,22 @@ class SetCollection:
         return len(self.sets)
 
     def sizes(self) -> np.ndarray:
-        return np.asarray([len(s) for s in self.sets], dtype=np.int32)
+        return self._memo(
+            "sizes",
+            lambda: np.asarray([len(s) for s in self.sets], dtype=np.int32))
 
     def padded(self, pad_to: int | None = None) -> tuple[np.ndarray, np.ndarray]:
-        """(n, L) int32 with -1 padding, plus (n,) sizes."""
+        """(n, L) int32 with -1 padding, plus (n,) sizes. Memoized per L."""
         sizes = self.sizes()
         L = int(pad_to if pad_to is not None else max(int(sizes.max(initial=0)), 1))
-        out = np.full((len(self), L), -1, dtype=np.int32)
-        for i, s in enumerate(self.sets):
-            out[i, : len(s)] = s
-        return out, sizes
+
+        def build():
+            out = np.full((len(self), L), -1, dtype=np.int32)
+            for i, s in enumerate(self.sets):
+                out[i, : len(s)] = s
+            return out
+
+        return self._memo(("padded", L), build), sizes
 
     def csr(self) -> tuple[np.ndarray, np.ndarray]:
         """Inverted index (element table): ``indptr`` (U+1,), ``setids``.
@@ -103,24 +124,36 @@ class SetCollection:
         paper's ``seq(a)`` (size-descending), stored as one linear array —
         the LFVT layout.
         """
-        counts = np.zeros(self.universe + 1, dtype=np.int64)
-        for s in self.sets:
-            counts[s + 1] += 1
-        indptr = np.cumsum(counts)
-        setids = np.empty(int(indptr[-1]), dtype=np.int32)
-        cursor = indptr[:-1].copy()
-        for row, s in enumerate(self.sets):
-            setids[cursor[s]] = row
-            cursor[s] += 1
-        return indptr.astype(np.int64), setids
+        def build():
+            counts = np.zeros(self.universe + 1, dtype=np.int64)
+            for s in self.sets:
+                counts[s + 1] += 1
+            indptr = np.cumsum(counts)
+            setids = np.empty(int(indptr[-1]), dtype=np.int32)
+            cursor = indptr[:-1].copy()
+            for row, s in enumerate(self.sets):
+                setids[cursor[s]] = row
+                cursor[s] += 1
+            return indptr.astype(np.int64), setids
+
+        return self._memo("csr", build)
 
     def bitmaps(self, words: int | None = None) -> np.ndarray:
-        """(n, W) uint32 membership bitmaps; bit ``a%32`` of word ``a//32``."""
+        """(n, W) uint32 membership bitmaps; bit ``a%32`` of word ``a//32``.
+
+        Memoized per word width ``W``: the MR drivers request the same
+        bitmaps for every R block / shard packing of a collection.
+        """
         W = words if words is not None else max((self.universe + 31) // 32, 1)
-        out = np.zeros((len(self), W), dtype=np.uint32)
-        for i, s in enumerate(self.sets):
-            np.bitwise_or.at(out[i], s // 32, np.uint32(1) << (s % 32).astype(np.uint32))
-        return out
+
+        def build():
+            out = np.zeros((len(self), W), dtype=np.uint32)
+            for i, s in enumerate(self.sets):
+                np.bitwise_or.at(out[i], s // 32,
+                                 np.uint32(1) << (s % 32).astype(np.uint32))
+            return out
+
+        return self._memo(("bitmaps", W), build)
 
     def total_elements(self) -> int:
         return int(self.sizes().sum())

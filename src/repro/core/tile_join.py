@@ -37,6 +37,7 @@ __all__ = [
     "window_bounds",
     "cf_rs_join_device",
     "clear_s_rep_cache",
+    "clear_r_block_cache",
     "round_capacity",
     "PAIR_CAP_GRAIN",
 ]
@@ -220,10 +221,55 @@ def _s_device_rep(S: SetCollection, family: str, W: int,
     return Ss, entry[key], entry["sizes_dev"], entry["sizes_np"]
 
 
+# ------------------------------------------------------------------ #
+# device-resident R-block representation cache
+#
+# Mirror of _S_REP_CACHE for the streamed side: the dedup pipeline joins
+# the same R batch against several thresholds/corpora, and the MR driver
+# re-blocks the same R on every call. Keyed per source collection
+# (weakly) by (family, word width, block range) -> uploaded device array.
+# ------------------------------------------------------------------ #
+_R_BLOCK_CACHE: "weakref.WeakKeyDictionary[SetCollection, dict]" = (
+    weakref.WeakKeyDictionary())
+# bound on cached block uploads per collection: joining the same R against
+# corpora of different universes (word widths) or with different r_block
+# grids would otherwise retain a device copy per combination until R dies
+_R_BLOCK_CACHE_MAX_ENTRIES = 64
+
+
+def clear_r_block_cache() -> None:
+    _R_BLOCK_CACHE.clear()
+
+
+def _r_block_rep(R: SetCollection, family: str, W: int, start: int,
+                 stop: int):
+    """-> (device rep of R[start:stop], cache_hit). Host rep is memoized on
+    the collection (``SetCollection.bitmaps``/``padded``); this adds the
+    per-block device upload."""
+    entry = _R_BLOCK_CACHE.get(R)
+    if entry is None:
+        entry = {}
+        _R_BLOCK_CACHE[R] = entry
+    # the padded-list rep does not depend on W: one key (and one upload)
+    # serves corpora of every universe width
+    key = (family, W, start, stop) if family == "bitmap" else (
+        family, start, stop)
+    hit = key in entry
+    if hit:
+        entry[key] = entry.pop(key)  # LRU: move to the fresh end
+    else:
+        if len(entry) >= _R_BLOCK_CACHE_MAX_ENTRIES:
+            entry.pop(next(iter(entry)))  # evict least-recently used
+        host = (R.bitmaps(W) if family == "bitmap" else R.padded()[0])
+        entry[key] = jnp.asarray(host[start:stop])
+    return entry[key], hit
+
+
 def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                       method: str = "popcount", r_block: int = 1024,
                       stats: dict | None = None, emit: str = "pairs",
-                      pair_capacity: int | None = None) -> set:
+                      pair_capacity: int | None = None,
+                      double_buffer: bool = True) -> set:
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
@@ -236,101 +282,145 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             transferred and scanned on host (output bytes O(m·n)).
     pair_capacity: optional initial pair-array capacity per R block for
             emit='pairs'; regrown automatically on overflow.
+    double_buffer: stream R blocks double-buffered — block k+1's device
+            work is dispatched *before* block k's pair count is synced to
+            host, so device compute overlaps host-side result building.
+            Results are identical with it off (debug knob).
     """
     if emit not in ("pairs", "mask"):
         raise ValueError(f"unknown emit mode {emit!r}")
     if not len(R) or not len(S):
+        if stats is not None:  # consumers index these unconditionally
+            stats.update(method=method, emit=emit, r_blocks=0, pair_count=0,
+                         output_bytes=0, dense_mask_bytes=0,
+                         double_buffered=double_buffer, regrows=0,
+                         r_rep_cache_hits=0)
         return set()
-    family = "bitmap" if method in ("popcount", "kernel_bitmap") else "onehot"
+    family = "onehot" if method == "onehot" else "bitmap"
     universe = max(R.universe, S.universe)
     W = max((universe + 31) // 32, 1)
     Ss, s_rep, s_sz, s_sizes = _s_device_rep(S, family, W, stats)
     r_sizes_all = R.sizes()
     lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t)
 
+    kernel_pairs = method in ("kernel_bitmap", "kernel_onehot") and (
+        emit == "pairs")
     if method in ("kernel_bitmap", "kernel_onehot"):
         from repro.kernels import ops as kops  # deferred: optional dep
 
     pairs: set = set()
     m = len(R)
-    out_sparse = 0   # bytes actually shipped by the sparse path
-    out_dense = 0    # bytes the dense path would ship
-    n_pairs_total = 0
-    live = total_tiles = 0
-    for start in range(0, m, r_block):
+    # speculative per-block compaction capacity: fixed (never carried
+    # between blocks) so the byte accounting stays deterministic
+    spec_cap = round_capacity(pair_capacity) if pair_capacity else (
+        PAIR_CAP_GRAIN)
+    acc = {"out_sparse": 0, "out_dense": 0, "n_pairs": 0, "live": 0,
+           "total_tiles": 0, "regrows": 0, "r_rep_hits": 0}
+
+    def dispatch(start: int) -> dict:
+        """Launch all of one R block's device work; no host syncs."""
         stop = min(start + r_block, m)
         sl = slice(start, stop)
-        sub = SetCollection(R.sets[sl], universe, R.ids[sl])
+        r_rep, hit = _r_block_rep(R, family, W, start, stop)
+        acc["r_rep_hits"] += hit
         r_sz = jnp.asarray(r_sizes_all[sl])
         lo = jnp.asarray(lo_all[sl])
         hi = jnp.asarray(hi_all[sl])
-        out_dense += (stop - start) * len(Ss)
-        kstats: dict = {}
-        if method in ("kernel_bitmap", "kernel_onehot") and emit == "pairs":
-            # live-tile schedule + in-kernel counts + device compaction
+        acc["out_dense"] += (stop - start) * len(Ss)
+        blk: dict = {"start": start}
+        if kernel_pairs:
+            # live-tile schedule + in-kernel counts; count sync deferred
             if method == "kernel_bitmap":
-                pp, n_pairs = kops.bitmap_join_pairs(
-                    jnp.asarray(sub.bitmaps(W)), r_sz, s_rep, s_sz, lo, hi,
-                    t, capacity=pair_capacity, stats=kstats)
+                blk["pending"] = kops.bitmap_join_pairs_dispatch(
+                    r_rep, r_sz, s_rep, s_sz, lo, hi, t)
             else:
-                r_pad, _ = sub.padded()
-                pp, n_pairs = kops.onehot_join_pairs(
-                    jnp.asarray(r_pad), r_sz, s_rep, s_sz, lo, hi, t,
-                    universe=universe, capacity=pair_capacity, stats=kstats)
-            local = np.asarray(pp)[:n_pairs]
-            out_sparse += kstats.get("output_bytes", 0)
-            live += kstats.get("live_tiles", 0)
-            total_tiles += kstats.get("total_tiles", 0)
+                blk["pending"] = kops.onehot_join_pairs_dispatch(
+                    r_rep, r_sz, s_rep, s_sz, lo, hi, t, universe=universe)
+            return blk
+        if method == "popcount":
+            mask = _popcount_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t)
+        elif method == "onehot":
+            mask = _onehot_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t,
+                                   universe=universe)
+        elif method == "kernel_bitmap":
+            mask = kops.bitmap_join(r_rep, r_sz, s_rep, s_sz, lo, hi, t)
+        elif method == "kernel_onehot":
+            mask = kops.onehot_join(r_rep, r_sz, s_rep, s_sz, lo, hi, t,
+                                    universe)
         else:
-            if method == "popcount":
-                mask = _popcount_qualify(jnp.asarray(sub.bitmaps(W)), r_sz,
-                                         s_rep, s_sz, lo, hi, t=t)
-            elif method == "onehot":
-                r_pad, _ = sub.padded()
-                mask = _onehot_qualify(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
-                                       lo, hi, t=t, universe=universe)
-            elif method == "kernel_bitmap":
-                mask = kops.bitmap_join(jnp.asarray(sub.bitmaps(W)), r_sz,
-                                        s_rep, s_sz, lo, hi, t)
-            elif method == "kernel_onehot":
-                r_pad, _ = sub.padded()
-                mask = kops.onehot_join(jnp.asarray(r_pad), r_sz, s_rep, s_sz,
-                                        lo, hi, t, universe)
-            else:
-                raise ValueError(f"unknown method {method!r}")
-            if emit == "pairs":
-                # jnp-level compaction: only a count + the packed pairs
-                # ever leave the device
-                n_pairs = int(_mask_total(mask))
-                cap = round_capacity(n_pairs if pair_capacity is None
-                                 else max(pair_capacity, 0))
-                while cap < n_pairs:  # overflow: regrow (exact, count known)
-                    cap = round_capacity(n_pairs)
-                local = (np.asarray(_compact_mask(mask, size=cap))[:n_pairs]
-                         if cap else np.zeros((0, 2), np.int64))
-                out_sparse += cap * 8 + 4
-            else:
-                mask_np = np.asarray(mask)
-                out_sparse += mask_np.size
-                rr, ss = np.nonzero(mask_np)
-                local = np.stack([rr, ss], axis=1) if len(rr) else (
-                    np.zeros((0, 2), np.int64))
-                n_pairs = len(local)
+            raise ValueError(f"unknown method {method!r}")
+        blk["mask"] = mask
+        if emit == "pairs":
+            # speculative on-device compaction at the fixed capacity; the
+            # exact count rides along and is synced only at finalize
+            blk["total"] = _mask_total(mask)
+            blk["packed"] = _compact_mask(mask, size=spec_cap)
+        return blk
+
+    def finalize(blk: dict) -> None:
+        """Sync one block's count, regrow if the speculation overflowed,
+        and fold its pairs into the result set."""
+        start = blk["start"]
+        if kernel_pairs:
+            kstats: dict = {}
+            pp, n_pairs = kops.join_pairs_finalize(
+                blk["pending"], capacity=pair_capacity, stats=kstats)
+            local = np.asarray(pp[:n_pairs] if n_pairs else pp[:0])
+            acc["out_sparse"] += 8 * n_pairs + 4 + kstats.get(
+                "counts_bytes", 0)
+            acc["live"] += kstats.get("live_tiles", 0)
+            acc["total_tiles"] += kstats.get("total_tiles", 0)
+            acc["regrows"] += kstats.get("regrows", 0)
+        elif emit == "pairs":
+            n_pairs = int(blk["total"])  # the only host sync per block
+            cap = spec_cap
+            if cap < n_pairs:  # overflow: regrow exactly once (count known)
+                cap = round_capacity(n_pairs)
+                blk["packed"] = _compact_mask(blk["mask"], size=cap)
+                acc["regrows"] += 1
+            # device-side slice: only the n_pairs rows + the count cross
+            # the host boundary; the cap buffer stays device-resident
+            local = (np.asarray(blk["packed"][:n_pairs])
+                     if cap else np.zeros((0, 2), np.int64))
+            acc["out_sparse"] += 8 * n_pairs + 4
+        else:
+            mask_np = np.asarray(blk["mask"])
+            acc["out_sparse"] += mask_np.size
+            rr, ss = np.nonzero(mask_np)
+            local = np.stack([rr, ss], axis=1) if len(rr) else (
+                np.zeros((0, 2), np.int64))
+            n_pairs = len(local)
         if len(local):
             rid = R.ids[start + local[:, 0]]
             sid = Ss.ids[local[:, 1]]
             pairs.update(zip(map(int, rid), map(int, sid)))
-        n_pairs_total += n_pairs
+        acc["n_pairs"] += n_pairs
+
+    in_flight: dict | None = None
+    for start in range(0, m, r_block):
+        blk = dispatch(start)  # block k+1 launches before block k syncs
+        if in_flight is not None:
+            finalize(in_flight)
+        if double_buffer:
+            in_flight = blk
+        else:
+            finalize(blk)
+    if in_flight is not None:
+        finalize(in_flight)
+
     if stats is not None:
         stats["method"] = method
         stats["emit"] = emit
         stats["r_blocks"] = -(-m // r_block)
-        stats["pair_count"] = n_pairs_total
-        stats["output_bytes"] = out_sparse
-        stats["dense_mask_bytes"] = out_dense
-        if method in ("kernel_bitmap", "kernel_onehot") and emit == "pairs":
-            stats["live_tiles"] = live
-            stats["total_tiles"] = total_tiles
+        stats["pair_count"] = acc["n_pairs"]
+        stats["output_bytes"] = acc["out_sparse"]
+        stats["dense_mask_bytes"] = acc["out_dense"]
+        stats["double_buffered"] = double_buffer
+        stats["regrows"] = acc["regrows"]
+        stats["r_rep_cache_hits"] = acc["r_rep_hits"]
+        if kernel_pairs:
+            stats["live_tiles"] = acc["live"]
+            stats["total_tiles"] = acc["total_tiles"]
     return pairs
 
 

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core.sets import SetCollection
 
-__all__ = ["DATASETS", "make_join_dataset", "TokenStream", "docs_to_sets"]
+__all__ = ["DATASETS", "make_join_dataset", "make_skew_dataset",
+           "TokenStream", "docs_to_sets"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +80,22 @@ def make_join_dataset(name: str, scale: float = 1.0, seed: int = 0):
     R = SetCollection.from_ragged(r_sets, universe=spec.universe)
     S = SetCollection.from_ragged(s_sets, universe=spec.universe)
     return R, S
+
+
+def make_skew_dataset(n: int, universe: int, a: float = 1.4, seed: int = 0):
+    """(R, S) with Zipf(``a``)-distributed *set sizes* — the shard-skew
+    stressor: a handful of huge sets next to a long tail of tiny ones,
+    which is exactly the load pathology Eq. 2-3 partitioning targets."""
+    rng = np.random.default_rng(seed)
+    max_len = max(universe // 4, 2)
+
+    def side():
+        sizes = np.clip(rng.zipf(a, n), 1, max_len)
+        return SetCollection.from_ragged(
+            [rng.choice(universe, size=int(s), replace=False) for s in sizes],
+            universe=universe)
+
+    return side(), side()
 
 
 # ---------------------------------------------------------------------- #

@@ -20,6 +20,7 @@ bit-exact); on TPU they compile to Mosaic.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -34,7 +35,8 @@ from . import onehot_join as _oj
 
 __all__ = ["bitmap_join", "onehot_join", "bitmap_join_pairs",
            "onehot_join_pairs", "join_pairs", "pick_tiles", "round_capacity",
-           "PAIR_CAP_GRAIN"]
+           "PAIR_CAP_GRAIN", "PendingPairs", "bitmap_join_pairs_dispatch",
+           "onehot_join_pairs_dispatch", "join_pairs_finalize"]
 
 
 def _interpret_default():
@@ -189,8 +191,31 @@ def _compact_live(mask_tiles, tile_i, tile_j, *, tm, tn, size):
     return jnp.stack([rows, cols], axis=1)
 
 
-def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
-                lo, hi, t, tiles, interpret, capacity, stats):
+@dataclasses.dataclass
+class PendingPairs:
+    """In-flight sparse join: device handles dispatched, counts not synced.
+
+    Produced by ``*_join_pairs_dispatch`` and resolved by
+    ``join_pairs_finalize``. Holding the staged masks + per-tile counts as
+    device arrays lets a driver launch the *next* block's kernel before
+    paying the host sync for this one (double-buffered R-block streaming,
+    DESIGN.md §6).
+    """
+
+    masks: jax.Array | None   # (L, TM, TN) staged qualifying sub-masks
+    counts: jax.Array | None  # (L, 1) exact per-tile pair counts (device)
+    tile_i: jax.Array | None  # (L,) live tile rows
+    tile_j: jax.Array | None  # (L,) live tile cols
+    tm: int
+    tn: int
+    live_tiles: int
+    total_tiles: int
+    dense_mask_bytes: int
+
+
+def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
+                         s_sizes, lo, hi, t, tiles, interpret) -> PendingPairs:
+    """Launch the live-tile kernel; return device handles without syncing."""
     interpret = _interpret_default() if interpret is None else interpret
     rb, r_sz, sb, s_sz, lo_p, hi_p, tls, m, n = _pad_operands(
         r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults)
@@ -198,30 +223,40 @@ def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
     m_tiles, n_tiles = rb.shape[0] // TM, sb.shape[0] // TN
     ti, tj = _live_tiles(lo_p[:, 0], hi_p[:, 0], m_tiles, n_tiles, TM, TN)
     L = len(ti)
+    if L == 0:
+        return PendingPairs(None, None, None, None, TM, TN, 0,
+                            m_tiles * n_tiles, m * n)
+    masks, counts = live_fn(jnp.asarray(ti), jnp.asarray(tj), rb, r_sz,
+                            sb, s_sz, lo_p, hi_p, t=t, tiles=tls,
+                            interpret=interpret)
+    return PendingPairs(masks, counts, jnp.asarray(ti), jnp.asarray(tj),
+                        TM, TN, L, m_tiles * n_tiles, m * n)
+
+
+def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
+                        stats: dict | None = None):
+    """Sync a dispatched join's counts and compact -> (pairs, n_pairs)."""
+    L = pending.live_tiles
     if stats is not None:
         stats["live_tiles"] = L
-        stats["total_tiles"] = m_tiles * n_tiles
-        stats["dense_mask_bytes"] = m * n
+        stats["total_tiles"] = pending.total_tiles
+        stats["dense_mask_bytes"] = pending.dense_mask_bytes
     if L == 0:
         if stats is not None:
             stats.update(pair_count=0, pair_bytes=0, counts_bytes=0,
                          output_bytes=0, regrows=0)
         return jnp.zeros((0, 2), jnp.int32), 0
-
-    masks, counts = live_fn(jnp.asarray(ti), jnp.asarray(tj), rb, r_sz,
-                            sb, s_sz, lo_p, hi_p, t=t, tiles=tls,
-                            interpret=interpret)
     # per-tile counts are exact even when a capacity hint is too small:
     # they tell us the regrown capacity without a second kernel pass.
-    counts_np = np.asarray(counts)[:, 0]
+    counts_np = np.asarray(pending.counts)[:, 0]
     total = int(counts_np.sum())
     cap = round_capacity(total if capacity is None else capacity)
     regrows = 0
     if cap < total:  # overflow: regrow to the exact requirement, recompact
         cap = round_capacity(total)
         regrows += 1
-    pairs = (_compact_live(masks, jnp.asarray(ti), jnp.asarray(tj),
-                           tm=TM, tn=TN, size=cap)
+    pairs = (_compact_live(pending.masks, pending.tile_i, pending.tile_j,
+                           tm=pending.tm, tn=pending.tn, size=cap)
              if cap else jnp.zeros((0, 2), jnp.int32))
     if stats is not None:
         stats["pair_count"] = total
@@ -230,6 +265,14 @@ def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
         stats["output_bytes"] = cap * 8 + L * 4
         stats["regrows"] = regrows
     return pairs, total
+
+
+def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
+                lo, hi, t, tiles, interpret, capacity, stats):
+    pending = _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes,
+                                   s_bitmaps, s_sizes, lo, hi, t, tiles,
+                                   interpret)
+    return join_pairs_finalize(pending, capacity, stats)
 
 
 def bitmap_join_pairs(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
@@ -256,6 +299,26 @@ def onehot_join_pairs(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo,
     return _join_pairs(_oj.onehot_join_live_tiled, _oj.DEFAULT_TILES,
                        r_in, r_sizes, s_in, s_sizes, lo, hi,
                        t, tiles, interpret, capacity, stats)
+
+
+def bitmap_join_pairs_dispatch(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo,
+                               hi, t: float, tiles=None,
+                               interpret: bool | None = None) -> PendingPairs:
+    """Async half of ``bitmap_join_pairs``: launch, don't sync."""
+    return _join_pairs_dispatch(_bj.bitmap_join_live_tiled, _bj.DEFAULT_TILES,
+                                r_bitmaps, r_sizes, s_bitmaps, s_sizes,
+                                lo, hi, t, tiles, interpret)
+
+
+def onehot_join_pairs_dispatch(r_bitmaps_or_padded, r_sizes, s_bitmaps,
+                               s_sizes, lo, hi, t: float,
+                               universe: int | None = None, tiles=None,
+                               interpret: bool | None = None) -> PendingPairs:
+    """Async half of ``onehot_join_pairs``: launch, don't sync."""
+    r_in, s_in = _coerce_bitmaps(r_bitmaps_or_padded, s_bitmaps, universe)
+    return _join_pairs_dispatch(_oj.onehot_join_live_tiled, _oj.DEFAULT_TILES,
+                                r_in, r_sizes, s_in, s_sizes, lo, hi,
+                                t, tiles, interpret)
 
 
 def join_pairs(method: str, *args, **kw):

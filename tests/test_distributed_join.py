@@ -55,7 +55,7 @@ def test_routing_matches_paper_fig4():
     part = load_aware_partition(R, S, 0.7, 2)
     s_rows, r_rows, stats = route(R, S, part)
     # every S set routed exactly once
-    assert sorted(sum(s_rows, [])) == list(range(6))
+    assert sorted(np.concatenate(s_rows).tolist()) == list(range(6))
     # r3 = row 2 appears in two shards
     appears = [k for k in range(2) if 2 in r_rows[k]]
     assert len(appears) == 2
