@@ -14,6 +14,8 @@ bytes each emission mode moves on this container.
 """
 from __future__ import annotations
 
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,11 +31,11 @@ from .common import emit, timed
 T = 0.5
 
 
-def _prep(R, S):
+def _prep(R, S, measure="jaccard"):
     Ss = S.sort_by_size()
     universe = max(R.universe, S.universe)
     W = (universe + 31) // 32
-    lo, hi = window_bounds(R.sizes(), Ss.sizes(), T)
+    lo, hi = window_bounds(R.sizes(), Ss.sizes(), T, measure)
     return (jnp.asarray(R.bitmaps(W)), jnp.asarray(R.sizes()),
             jnp.asarray(Ss.bitmaps(W)), jnp.asarray(Ss.sizes()),
             jnp.asarray(lo), jnp.asarray(hi), universe, Ss)
@@ -72,16 +74,20 @@ def tpu_projection(m, n, universe, skip_frac=0.0, pairs=None):
     }
 
 
-def main() -> dict:
+def main(measures=("jaccard",)) -> dict:
+    """Kernel microbench; ``measures`` adds a similarity-measure axis
+    (per-measure windows change the skip fraction, the predicate itself
+    is a handful of int32 VPU ops either way)."""
     out = {}
-    for ds in ("dblp", "enron"):
+    for ds, measure in itertools.product(("dblp", "enron"), measures):
         R, S = make_join_dataset(ds, scale=0.04, seed=6)
-        r_bm, r_sz, s_bm, s_sz, lo, hi, universe, Ss = _prep(R, S)
+        tag = ds if measure == "jaccard" else f"{ds}/{measure}"
+        r_bm, r_sz, s_bm, s_sz, lo, hi, universe, Ss = _prep(R, S, measure)
         m, n = r_bm.shape[0], s_bm.shape[0]
 
         def pop():
-            return _popcount_qualify(r_bm, r_sz, s_bm, s_sz, lo, hi, t=T
-                                     ).block_until_ready()
+            return _popcount_qualify(r_bm, r_sz, s_bm, s_sz, lo, hi, t=T,
+                                     measure=measure).block_until_ready()
 
         pop()  # compile
         mask, t_pop = timed(pop, repeat=3)
@@ -92,7 +98,8 @@ def main() -> dict:
 
         def oh():
             return _onehot_qualify(r_pad, r_sz, s_pad, s_sz, lo, hi, t=T,
-                                   universe=universe).block_until_ready()
+                                   universe=universe, measure=measure
+                                   ).block_until_ready()
 
         oh()
         _, t_oh = timed(oh, repeat=3)
@@ -125,18 +132,18 @@ def main() -> dict:
         skip = 1.0 - in_win.mean()
         proj_dense = tpu_projection(m, n, universe, skip)
         proj_sparse = tpu_projection(m, n, universe, skip, pairs=n_pairs)
-        emit(f"kernel/{ds}/popcount_cpu", t_pop,
+        emit(f"kernel/{tag}/popcount_cpu", t_pop,
              f"tpu_proj_us={proj_dense['popcount_s']*1e6:.1f};skip={skip:.2f}")
-        emit(f"kernel/{ds}/onehot_cpu", t_oh,
+        emit(f"kernel/{tag}/onehot_cpu", t_oh,
              f"tpu_proj_us={proj_dense['onehot_s']*1e6:.1f}")
-        emit(f"kernel/{ds}/emit_sparse", t_compact,
+        emit(f"kernel/{tag}/emit_sparse", t_compact,
              f"pairs={n_pairs};density={density:.2e}"
              f";bytes={sparse_bytes};tpu_proj_us="
              f"{proj_sparse['popcount_s']*1e6:.1f}")
-        emit(f"kernel/{ds}/emit_dense", t_dense,
+        emit(f"kernel/{tag}/emit_dense", t_dense,
              f"bytes={dense_bytes};tpu_proj_us="
              f"{proj_dense['popcount_s']*1e6:.1f}")
-        out[ds] = {
+        out[tag] = {
             "pop": t_pop, "oh": t_oh,
             "emit_sparse_s": t_compact, "emit_dense_s": t_dense,
             "result_pairs": n_pairs, "result_density": density,
@@ -151,4 +158,14 @@ def main() -> dict:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    from repro.core.measures import measure_names
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--measure", nargs="+", default=["jaccard"],
+                    choices=list(measure_names()) + ["all"],
+                    help="similarity-measure axis (or 'all')")
+    args = ap.parse_args()
+    ms = measure_names() if "all" in args.measure else tuple(args.measure)
+    main(measures=ms)

@@ -12,11 +12,16 @@ buffers vs the dense per-shard boolean masks — and a shard-skew sweep
 global-max vs bucketed shard packing (reduce bytes, peak resident mask,
 padding waste).
 
-CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]``
-— ``--smoke`` runs a tiny single-dataset sweep (CI); ``--out`` writes the
-result dict as JSON (the BENCH artifact).
+CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]
+[--measure jaccard cosine ... | all]`` — ``--smoke`` runs a tiny
+single-dataset sweep (CI); ``--out`` writes the result dict as JSON (the
+BENCH artifact); ``--measure`` adds the similarity-measure axis (per-
+measure windows change R replication, shard loads and result density —
+DESIGN.md §8).
 """
 from __future__ import annotations
+
+import itertools
 
 from repro.core.baselines import fs_join, mr_rp_ppjoin
 from repro.core.distributed import mr_cf_rs_join
@@ -27,39 +32,43 @@ from .common import emit
 SHARDS = 8
 
 
-def table3_sweep(smoke: bool = False) -> dict:
+def table3_sweep(smoke: bool = False, measures=("jaccard",)) -> dict:
     out = {}
     datasets = ("dblp",) if smoke else ("dblp", "kosarak", "enron", "querylog")
     scale = 0.01 if smoke else 0.06
     thresholds = (0.875,) if smoke else (0.875, 0.375)
-    for ds in datasets:
+    for ds, measure in itertools.product(datasets, measures):
         R, S = make_join_dataset(ds, scale=scale, seed=4)
+        # default-measure keys stay unprefixed (artifact continuity)
+        tag = ds if measure == "jaccard" else f"{ds}/{measure}"
         for t in thresholds:  # dyadic analogues of the paper sweep
             ours_stats: dict = {}
-            mr_cf_rs_join(R, S, t, SHARDS, stats=ours_stats)
+            mr_cf_rs_join(R, S, t, SHARDS, stats=ours_stats, measure=measure)
             pp_stats: dict = {}
-            mr_rp_ppjoin(R, S, t, SHARDS, pp_stats)
+            mr_rp_ppjoin(R, S, t, SHARDS, pp_stats, measure=measure)
             fs_stats: dict = {}
-            fs_join(R, S, t, SHARDS, fs_stats)
-            emit(f"disk/{ds}/t{t}/mr_cf", 0.0,
-                 f"bytes={ours_stats['shuffle_bytes']}")
-            emit(f"disk/{ds}/t{t}/rp_ppjoin", 0.0,
+            fs_join(R, S, t, SHARDS, fs_stats, measure=measure)
+            emit(f"disk/{tag}/t{t}/mr_cf", 0.0,
+                 f"bytes={ours_stats['shuffle_bytes']}"
+                 f";r_replication={ours_stats['r_replication']:.2f}")
+            emit(f"disk/{tag}/t{t}/rp_ppjoin", 0.0,
                  f"bytes={pp_stats['shuffle_bytes']}")
-            emit(f"disk/{ds}/t{t}/fs_join", 0.0,
+            emit(f"disk/{tag}/t{t}/fs_join", 0.0,
                  f"bytes={fs_stats['shuffle_bytes']}")
             dense = ours_stats["dense_mask_bytes"]
             density = ours_stats["result_pairs"] / max(len(R) * len(S), 1)
-            emit(f"disk/{ds}/t{t}/reduce_out", 0.0,
+            emit(f"disk/{tag}/t{t}/reduce_out", 0.0,
                  f"pairs={ours_stats['result_pairs']}"
                  f";density={density:.2e}"
                  f";pair_bytes={ours_stats['pair_bytes']}"
                  f";compacted_bytes={ours_stats['reduce_bytes']}"
                  f";dense_mask_bytes={dense}"
                  f";mask_peak={ours_stats['reduce_mask_peak_bytes']}")
-            out[(ds, t)] = {
+            out[(tag, t)] = {
                 "mr_cf": ours_stats["shuffle_bytes"],
                 "rp_ppjoin": pp_stats["shuffle_bytes"],
                 "fs_join": fs_stats["shuffle_bytes"],
+                "r_replication": ours_stats["r_replication"],
                 "result_pairs": ours_stats["result_pairs"],
                 "result_density": density,
                 "reduce_bytes_compacted": ours_stats["reduce_bytes"],
@@ -70,7 +79,7 @@ def table3_sweep(smoke: bool = False) -> dict:
     return out
 
 
-def skew_sweep(smoke: bool = False) -> dict:
+def skew_sweep(smoke: bool = False, measures=("jaccard",)) -> dict:
     """Shard-skew sweep: Zipfian set sizes, hash vs load-aware routing,
     global-max vs bucketed shard packing.
 
@@ -84,39 +93,41 @@ def skew_sweep(smoke: bool = False) -> dict:
     universe = 400 if smoke else 1500
     R, S = make_skew_dataset(n, universe, a=1.4, seed=7)
     t = 0.5
-    for strategy in ("hash", "load_aware"):
-        for pad in ("global", "bucket"):
-            sp: dict = {}
-            mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
-                          stats=sp)
-            dm: dict = {}
-            mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
-                          emit="mask", stats=dm)
-            emit(f"skew/{strategy}/{pad}", 0.0,
-                 f"pairs={sp['result_pairs']}"
-                 f";reduce_sparse={sp['reduce_bytes']}"
-                 f";reduce_dense={dm['reduce_bytes']}"
-                 f";mask_peak_sparse={sp['reduce_mask_peak_bytes']}"
-                 f";mask_peak_dense={dm['reduce_mask_peak_bytes']}"
-                 f";pad_waste_mean={sp['pad_waste_mean']:.3f}"
-                 f";pad_waste_max={sp['pad_waste_max']:.3f}"
-                 f";max_load={sp['max_load']}")
-            out[("skew", strategy, pad)] = {
-                "result_pairs": sp["result_pairs"],
-                "reduce_bytes_sparse": sp["reduce_bytes"],
-                "reduce_bytes_dense": dm["reduce_bytes"],
-                "mask_peak_sparse": sp["reduce_mask_peak_bytes"],
-                "mask_peak_dense": dm["reduce_mask_peak_bytes"],
-                "pad_waste_mean": sp["pad_waste_mean"],
-                "pad_waste_max": sp["pad_waste_max"],
-                "max_load": sp["max_load"],
-            }
+    for strategy, pad, measure in itertools.product(
+            ("hash", "load_aware"), ("global", "bucket"), measures):
+        key = (f"{strategy}/{pad}" if measure == "jaccard"
+               else f"{strategy}/{pad}/{measure}")
+        sp: dict = {}
+        mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
+                      stats=sp, measure=measure)
+        dm: dict = {}
+        mr_cf_rs_join(R, S, t, SHARDS, strategy=strategy, pad=pad,
+                      emit="mask", stats=dm, measure=measure)
+        emit(f"skew/{key}", 0.0,
+             f"pairs={sp['result_pairs']}"
+             f";reduce_sparse={sp['reduce_bytes']}"
+             f";reduce_dense={dm['reduce_bytes']}"
+             f";mask_peak_sparse={sp['reduce_mask_peak_bytes']}"
+             f";mask_peak_dense={dm['reduce_mask_peak_bytes']}"
+             f";pad_waste_mean={sp['pad_waste_mean']:.3f}"
+             f";pad_waste_max={sp['pad_waste_max']:.3f}"
+             f";max_load={sp['max_load']}")
+        out[("skew", key)] = {
+            "result_pairs": sp["result_pairs"],
+            "reduce_bytes_sparse": sp["reduce_bytes"],
+            "reduce_bytes_dense": dm["reduce_bytes"],
+            "mask_peak_sparse": sp["reduce_mask_peak_bytes"],
+            "mask_peak_dense": dm["reduce_mask_peak_bytes"],
+            "pad_waste_mean": sp["pad_waste_mean"],
+            "pad_waste_max": sp["pad_waste_max"],
+            "max_load": sp["max_load"],
+        }
     return out
 
 
-def main(smoke: bool = False) -> dict:
-    out = table3_sweep(smoke)
-    out.update(skew_sweep(smoke))
+def main(smoke: bool = False, measures=("jaccard",)) -> dict:
+    out = table3_sweep(smoke, measures)
+    out.update(skew_sweep(smoke, measures))
     return out
 
 
@@ -124,13 +135,20 @@ if __name__ == "__main__":
     import argparse
     import json
 
+    from repro.core.measures import measure_names
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny single-dataset sweep (CI smoke)")
     ap.add_argument("--out", default=None,
                     help="write results as JSON to this path")
+    ap.add_argument("--measure", nargs="+", default=["jaccard"],
+                    choices=list(measure_names()) + ["all"],
+                    help="similarity-measure axis (or 'all')")
     args = ap.parse_args()
-    res = main(smoke=args.smoke)
+    ms = (measure_names() if "all" in args.measure
+          else tuple(args.measure))
+    res = main(smoke=args.smoke, measures=ms)
     if args.out:
         flat = {"/".join(map(str, k)): v for k, v in res.items()}
         with open(args.out, "w") as fh:

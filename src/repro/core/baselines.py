@@ -17,7 +17,8 @@ from __future__ import annotations
 import numpy as np
 
 from .join import cf_rs_join_lfvt
-from .sets import SetCollection, jaccard, length_filter_bounds
+from .measures import get_measure
+from .sets import SetCollection, length_filter_bounds
 
 __all__ = ["allpairs_join", "ppjoin_join", "mr_rp_ppjoin", "fs_join",
            "fasttelp_sj"]
@@ -26,23 +27,25 @@ _HDR = 8  # per-record header bytes (set id + size), as in core.partition
 _ELEM = 4
 
 
-def _verify(Ri, Sj, t) -> bool:
-    return jaccard(Ri, Sj) >= t
+def _verify(Ri, Sj, t, measure="jaccard") -> bool:
+    inter = len(np.intersect1d(Ri, Sj, assume_unique=True))
+    return get_measure(measure).qualifies(inter, len(Ri), len(Sj), t)
 
 
 # ---------------------------------------------------------------------- #
 def allpairs_join(R: SetCollection, S: SetCollection, t: float,
-                  stats: dict | None = None) -> set:
+                  stats: dict | None = None,
+                  measure: str = "jaccard") -> set:
     """Length filter -> verify every surviving pair (candidate-based)."""
     s_sizes = S.sizes()
     out, candidates = set(), 0
     for i, Ri in enumerate(R.sets):
         if not len(Ri):
             continue
-        lo, hi = length_filter_bounds(len(Ri), t)
+        lo, hi = length_filter_bounds(len(Ri), t, measure)
         for j in np.nonzero((s_sizes >= lo) & (s_sizes <= hi))[0]:
             candidates += 1
-            if _verify(Ri, S.sets[j], t):
+            if _verify(Ri, S.sets[j], t, measure):
                 out.add((int(R.ids[i]), int(S.ids[j])))
     if stats is not None:
         stats["candidates"] = candidates
@@ -64,14 +67,18 @@ def _freq_order(R: SetCollection, S: SetCollection) -> np.ndarray:
     return rank
 
 
-def _prefix(tokens_ranked: np.ndarray, size: int, t: float) -> np.ndarray:
-    """Jaccard prefix: first |x| - ceil(t*|x|) + 1 tokens in rank order."""
-    k = size - int(np.ceil(t * size)) + 1
+def _prefix(tokens_ranked: np.ndarray, size: int, t: float,
+            measure: str = "jaccard") -> np.ndarray:
+    """Prefix filter: first |x| - lb + 1 tokens in rank order, where lb is
+    the measure's overlap lower bound over the size window (Jaccard:
+    ceil(t·|x|); overlap measure: 1, i.e. no pruning power)."""
+    k = size - get_measure(measure).prefix_min_overlap(size, t) + 1
     return tokens_ranked[:k]
 
 
 def ppjoin_join(R: SetCollection, S: SetCollection, t: float,
-                stats: dict | None = None) -> set:
+                stats: dict | None = None,
+                measure: str = "jaccard") -> set:
     """Prefix-filter candidate join with an inverted index over S prefixes."""
     rank = _freq_order(R, S)
     s_ranked = [np.sort(rank[s]) for s in S.sets]
@@ -81,21 +88,21 @@ def ppjoin_join(R: SetCollection, S: SetCollection, t: float,
     index: dict[int, list[int]] = {}
     for j, sr in enumerate(s_ranked):
         if len(sr):
-            for tok in _prefix(sr, len(sr), t):
+            for tok in _prefix(sr, len(sr), t, measure):
                 index.setdefault(int(tok), []).append(j)
     out, candidates = set(), 0
     for i, rr in enumerate(r_ranked):
         if not len(rr):
             continue
-        lo, hi = length_filter_bounds(len(rr), t)
+        lo, hi = length_filter_bounds(len(rr), t, measure)
         seen: set[int] = set()
-        for tok in _prefix(rr, len(rr), t):
+        for tok in _prefix(rr, len(rr), t, measure):
             for j in index.get(int(tok), ()):
                 if j in seen or not (lo <= s_sizes[j] <= hi):
                     continue
                 seen.add(j)
                 candidates += 1
-                if _verify(R.sets[i], S.sets[j], t):
+                if _verify(R.sets[i], S.sets[j], t, measure):
                     out.add((int(R.ids[i]), int(S.ids[j])))
     if stats is not None:
         stats["candidates"] = candidates
@@ -105,7 +112,8 @@ def ppjoin_join(R: SetCollection, S: SetCollection, t: float,
 
 # ---------------------------------------------------------------------- #
 def mr_rp_ppjoin(R: SetCollection, S: SetCollection, t: float,
-                 n_shards: int, stats: dict | None = None) -> set:
+                 n_shards: int, stats: dict | None = None,
+                 measure: str = "jaccard") -> set:
     """RP-PPJoin [31]: stage-2 routes a full copy of each set per prefix
     token (token -> shard by hash); shards run PPJoin locally; results are
     deduped globally. Shuffle bytes grow with prefix replication — the
@@ -119,7 +127,8 @@ def mr_rp_ppjoin(R: SetCollection, S: SetCollection, t: float,
             if not len(sset):
                 continue
             ranked = np.sort(rank[sset])
-            shards = {int(tok) % n_shards for tok in _prefix(ranked, len(ranked), t)}
+            shards = {int(tok) % n_shards
+                      for tok in _prefix(ranked, len(ranked), t, measure)}
             for k in shards:
                 rows[k].append(row)
                 shuffle += len(sset) * _ELEM + _HDR
@@ -133,7 +142,7 @@ def mr_rp_ppjoin(R: SetCollection, S: SetCollection, t: float,
         Sk = SetCollection([S.sets[j] for j in shard_s[k]], S.universe,
                            S.ids[shard_s[k]])
         st: dict = {}
-        out |= ppjoin_join(Rk, Sk, t, st)
+        out |= ppjoin_join(Rk, Sk, t, st, measure)
         candidates += st["candidates"]
     if stats is not None:
         stats["candidates"] = candidates
@@ -143,7 +152,7 @@ def mr_rp_ppjoin(R: SetCollection, S: SetCollection, t: float,
 
 # ---------------------------------------------------------------------- #
 def fs_join(R: SetCollection, S: SetCollection, t: float, n_shards: int,
-            stats: dict | None = None) -> set:
+            stats: dict | None = None, measure: str = "jaccard") -> set:
     """FS-Join [26]: split the (frequency-ordered) universe into vertical
     segments, shard by segment, emit per-segment partial intersections,
     then merge partials and verify. Intermediate volume = emitted partial
@@ -172,11 +181,11 @@ def fs_join(R: SetCollection, S: SetCollection, t: float, n_shards: int,
             partials[pair] = partials.get(pair, 0) + c
             shuffle += 12  # emitted partial record (i, j, count)
     out, candidates = set(), 0
+    m = get_measure(measure)
     r_sizes, s_sizes = R.sizes(), S.sizes()
     for (i, j), inter in partials.items():
         candidates += 1
-        union = int(r_sizes[i]) + int(s_sizes[j]) - inter
-        if union > 0 and inter / union >= t:
+        if m.qualifies(inter, int(r_sizes[i]), int(s_sizes[j]), t):
             out.add((int(R.ids[i]), int(S.ids[j])))
     if stats is not None:
         stats["candidates"] = candidates
@@ -186,7 +195,7 @@ def fs_join(R: SetCollection, S: SetCollection, t: float, n_shards: int,
 
 # ---------------------------------------------------------------------- #
 def fasttelp_sj(R: SetCollection, S: SetCollection, t: float,
-                stats: dict | None = None) -> set:
+                stats: dict | None = None, measure: str = "jaccard") -> set:
     """FastTELP-SJ [11] adapted to R-S (as the paper does): one big tree
     over R∪S, self-join, keep cross pairs. The merged tree is the memory
     cost the paper criticizes."""
@@ -196,7 +205,7 @@ def fasttelp_sj(R: SetCollection, S: SetCollection, t: float,
         np.concatenate([R.ids, S.ids + 10**9]),
     )
     st: dict = {}
-    pairs = cf_rs_join_lfvt(merged, merged, t, stats=st)
+    pairs = cf_rs_join_lfvt(merged, merged, t, stats=st, measure=measure)
     out = {
         (r, s - 10**9) for (r, s) in pairs if r < 10**9 <= s
     }

@@ -35,6 +35,7 @@ try:  # jax >= 0.5 re-exports shard_map at top level
 except ImportError:  # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
+from .measures import get_measure
 from .partition import Partitioning, hash_partition, load_aware_partition, route
 from .sets import SetCollection
 from .tile_join import (PAIR_CAP_GRAIN, popcount_counts, qualify,
@@ -47,16 +48,16 @@ __all__ = ["mr_cf_rs_join", "shard_blocks", "local_join_mask", "ShardBlock"]
 # shard-local compute (identical under loop and shard_map)
 # ---------------------------------------------------------------------- #
 def local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t: float,
-                    method: str = "popcount"):
+                    method: str = "popcount", measure: str = "jaccard"):
     """Shard-local candidate-free join -> (m, n) bool qualifying mask."""
     if method in ("kernel_bitmap", "kernel_onehot"):
         from repro.kernels import ops as kops
         fn = kops.bitmap_join if method == "kernel_bitmap" else kops.onehot_join
-        return fn(r_bm, r_sz, s_bm, s_sz, lo, hi, t)
+        return fn(r_bm, r_sz, s_bm, s_sz, lo, hi, t, measure=measure)
     counts = popcount_counts(r_bm, s_bm)
     cols = jnp.arange(s_bm.shape[0], dtype=jnp.int32)[None, :]
     in_window = (cols >= lo[:, None]) & (cols < hi[:, None])
-    return qualify(counts, r_sz, s_sz, t) & in_window
+    return qualify(counts, r_sz, s_sz, t, measure) & in_window
 
 
 # ---------------------------------------------------------------------- #
@@ -131,6 +132,9 @@ def shard_blocks(R: SetCollection, S: SetCollection, part: Partitioning,
                  t: float, pad: str = "global"):
     """Build the post-shuffle layout: stacked, padded per-shard arrays.
 
+    Routing and the per-shard size windows follow ``part.measure``
+    (Lemma 3.1 generalized — DESIGN.md §8).
+
     pad: 'global' — every shard padded to the global (m_max, n_max); one
          ``ShardBlock`` covering all shards (required by ``shard_map``).
          'bucket' — shards grouped by power-of-two (m, n) footprint; each
@@ -190,7 +194,8 @@ def shard_blocks(R: SetCollection, S: SetCollection, part: Partitioning,
         for lk, k in enumerate(shard_ids):
             mk, nk = int(m_k[k]), int(n_k[k])
             if mk and nk:
-                l, h = window_bounds(r_sz[lk, :mk], s_sz[lk, :nk], t)
+                l, h = window_bounds(r_sz[lk, :mk], s_sz[lk, :nk], t,
+                                     part.measure)
                 lo[lk, :mk] = l
                 hi[lk, :mk] = h
         blocks.append(ShardBlock(shard_ids, (r_bm, r_sz, s_bm, s_sz, lo, hi),
@@ -213,34 +218,37 @@ def shard_blocks(R: SetCollection, S: SetCollection, part: Partitioning,
 # ---------------------------------------------------------------------- #
 # reduce phase — dense-mask fallback (emit='mask')
 # ---------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("t", "method"))
-def _loop_reduce(blocks, *, t: float, method: str):
+@functools.partial(jax.jit, static_argnames=("t", "method", "measure"))
+def _loop_reduce(blocks, *, t: float, method: str, measure: str):
     def per_shard(args):
         r_bm, r_sz, s_bm, s_sz, lo, hi = args
-        return local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method)
+        return local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method,
+                               measure)
     return jax.lax.map(per_shard, blocks)
 
 
 @functools.lru_cache(maxsize=64)
-def _shard_map_mask_fn(mesh: Mesh, axis: str, t: float, method: str):
+def _shard_map_mask_fn(mesh: Mesh, axis: str, t: float, method: str,
+                       measure: str):
     """Jitted shard_map dense reduce, cached so repeated calls on the same
     mesh hit the jit cache instead of retracing (meshes are few and
     long-lived; the bounded cache holds them strongly)."""
     spec = P(axis)
     def body(r_bm, r_sz, s_bm, s_sz, lo, hi):
         mask = local_join_mask(r_bm[0], r_sz[0], s_bm[0], s_sz[0],
-                               lo[0], hi[0], t, method)
+                               lo[0], hi[0], t, method, measure)
         return mask[None]
     return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 6,
                              out_specs=spec))
 
 
-def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str):
+def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str,
+                      measure: str):
     spec = P(axis)
     placed = tuple(
         jax.device_put(jnp.asarray(b), NamedSharding(mesh, spec)) for b in blocks
     )
-    return _shard_map_mask_fn(mesh, axis, t, method)(*placed)
+    return _shard_map_mask_fn(mesh, axis, t, method, measure)(*placed)
 
 
 # ---------------------------------------------------------------------- #
@@ -256,8 +264,9 @@ def _shard_pairs_body(mask, cap: int):
     return jnp.stack([rr, cc], axis=1).astype(jnp.int32), count
 
 
-@functools.partial(jax.jit, static_argnames=("t", "method", "cap"))
-def _loop_reduce_pairs(arrays, *, t: float, method: str, cap: int):
+@functools.partial(jax.jit, static_argnames=("t", "method", "cap", "measure"))
+def _loop_reduce_pairs(arrays, *, t: float, method: str, cap: int,
+                       measure: str):
     """lax.map over shards -> ((K, cap, 2) int32 pairs, (K,) int32 counts).
 
     The per-shard dense mask exists only inside the map body (one shard at
@@ -265,21 +274,22 @@ def _loop_reduce_pairs(arrays, *, t: float, method: str, cap: int):
     """
     def per_shard(args):
         r_bm, r_sz, s_bm, s_sz, lo, hi = args
-        mask = local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method)
+        mask = local_join_mask(r_bm, r_sz, s_bm, s_sz, lo, hi, t, method,
+                               measure)
         return _shard_pairs_body(mask, cap)
     return jax.lax.map(per_shard, arrays)
 
 
 @functools.lru_cache(maxsize=64)
 def _shard_map_pairs_fn(mesh: Mesh, axis: str, t: float, method: str,
-                        cap: int):
+                        cap: int, measure: str):
     """Jitted shard_map shard-sparse reduce, cached per (mesh, axis, t,
-    method, cap) — repeated joins (the dedup pipeline) and regrow retries
-    reuse the compiled executable instead of retracing."""
+    method, cap, measure) — repeated joins (the dedup pipeline) and regrow
+    retries reuse the compiled executable instead of retracing."""
     spec = P(axis)
     def body(r_bm, r_sz, s_bm, s_sz, lo, hi):
         mask = local_join_mask(r_bm[0], r_sz[0], s_bm[0], s_sz[0],
-                               lo[0], hi[0], t, method)
+                               lo[0], hi[0], t, method, measure)
         pairs, count = _shard_pairs_body(mask, cap)
         return pairs[None], count[None]
     return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 6,
@@ -287,7 +297,7 @@ def _shard_map_pairs_fn(mesh: Mesh, axis: str, t: float, method: str,
 
 
 def _shard_map_reduce_pairs(placed, mesh: Mesh, axis: str, *, t: float,
-                            method: str, cap: int):
+                            method: str, cap: int, measure: str):
     """shard_map reduce with in-shard compaction: each device computes its
     own shard's mask, counts it, and packs qualifying (row, col) pairs into
     a fixed-capacity buffer — the all-gathered output is (n_shards, cap, 2)
@@ -295,11 +305,12 @@ def _shard_map_reduce_pairs(placed, mesh: Mesh, axis: str, *, t: float,
 
     ``placed`` must already be device_put with the shard sharding (the
     regrow retry then re-runs only the compute, not the upload)."""
-    return _shard_map_pairs_fn(mesh, axis, t, method, cap)(*placed)
+    return _shard_map_pairs_fn(mesh, axis, t, method, cap, measure)(*placed)
 
 
 def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
-                        cap_hint: int, mesh: Mesh | None, axis: str):
+                        cap_hint: int, mesh: Mesh | None, axis: str,
+                        measure: str):
     """Run the shard-sparse reduce for one bucket with the power-of-two
     regrow protocol: per-shard counts are exact, so an overflow regrows the
     capacity in one step and reruns at most once.
@@ -319,10 +330,11 @@ def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
     while True:
         if mesh is not None:
             pairs_dev, counts_dev = _shard_map_reduce_pairs(
-                placed, mesh, axis, t=t, method=method, cap=cap)
+                placed, mesh, axis, t=t, method=method, cap=cap,
+                measure=measure)
         else:
             pairs_dev, counts_dev = _loop_reduce_pairs(
-                placed, t=t, method=method, cap=cap)
+                placed, t=t, method=method, cap=cap, measure=measure)
         counts = np.asarray(counts_dev).reshape(-1)
         mx = int(counts.max(initial=0))
         if mx <= cap:
@@ -332,7 +344,7 @@ def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
 
 
 def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
-                        cap_hint: int):
+                        cap_hint: int, measure: str):
     """Per-shard live-tiled kernel reduce (loop path, kernel methods).
 
     Reuses the §6 live-tile schedule shard by shard: each shard's
@@ -366,7 +378,8 @@ def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
     for lk in range(block.n_local):
         cur = dispatch(jnp.asarray(r_bm[lk]), jnp.asarray(r_sz[lk]),
                        jnp.asarray(s_bm[lk]), jnp.asarray(s_sz[lk]),
-                       jnp.asarray(lo[lk]), jnp.asarray(hi[lk]), t)
+                       jnp.asarray(lo[lk]), jnp.asarray(hi[lk]), t,
+                       measure=measure)
         staged_sizes.append(cur.live_tiles * cur.tm * cur.tn)
         if in_flight is not None:
             settle(in_flight)
@@ -413,10 +426,14 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                   method: str = "popcount", mesh: Mesh | None = None,
                   axis: str = "data", stats: dict | None = None,
                   emit: str = "pairs", pad: str = "auto",
-                  pair_capacity: int | None = None) -> set:
+                  pair_capacity: int | None = None,
+                  measure: str = "jaccard") -> set:
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
+    measure:  'jaccard' | 'cosine' | 'dice' | 'overlap' — qualify
+              predicate, per-shard windows and map-phase R replication all
+              specialize per measure (DESIGN.md §8)
     mesh:     if given, reduce runs under shard_map on ``axis`` (whose size
               must equal ``n_shards``); otherwise a sequential shard loop.
     emit:     'pairs' (default) — compaction happens inside the shard-local
@@ -438,7 +455,8 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     if not len(R) or not len(S):
         if stats is not None:  # consumers index these unconditionally
             stats.update(
-                n_shards=0, emit=emit, result_pairs=0, pair_bytes=0,
+                n_shards=0, emit=emit, measure=measure, result_pairs=0,
+                pair_bytes=0,
                 reduce_bytes=0, dense_mask_bytes=0, regrows=0,
                 reduce_intermediate_peak_bytes=0, reduce_mask_peak_bytes=0,
                 shuffle_bytes=0, shard_loads=[], max_load=0,
@@ -447,8 +465,11 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                 pad_waste_mean=0.0, pad=pad, n_buckets=0, intervals=[],
                 psi=0.0)
         return set()
+    # int32 exactness guard for the device predicate (DESIGN.md §8)
+    get_measure(measure).validate(
+        t, max(int(R.sizes().max(initial=0)), int(S.sizes().max(initial=0))))
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
-        R, S, t, n_shards)
+        R, S, t, n_shards, measure=measure)
     pad_mode = pad if pad != "auto" else ("global" if mesh is not None
                                           else "bucket")
     if mesh is not None and pad_mode != "global":
@@ -472,7 +493,7 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         if kernel_loop:
             per_shard, counts, out_b, rg, lv, tt, staged = (
                 _kernel_block_pairs(block, t=t, method=method,
-                                    cap_hint=pair_capacity))
+                                    cap_hint=pair_capacity, measure=measure))
             for lk, local in enumerate(per_shard):
                 _emit_shard_pairs(block, lk, local, pairs)
             reduce_bytes += out_b
@@ -487,7 +508,7 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         elif emit == "pairs":
             pairs_dev, counts, cap, rg = _block_pairs_reduce(
                 block, t=t, method=method, cap_hint=cap_hint,
-                mesh=mesh, axis=axis)
+                mesh=mesh, axis=axis, measure=measure)
             _collect_block_pairs(block, pairs_dev, counts, pairs)
             # variable-length reduce output: each shard ships its exact
             # slice + one count; the cap buffer never leaves the device
@@ -503,11 +524,12 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         else:
             if mesh is not None:
                 masks_dev = _shard_map_reduce(block.arrays, mesh, axis,
-                                              t=t, method=method)
+                                              t=t, method=method,
+                                              measure=measure)
             else:
                 masks_dev = _loop_reduce(
                     tuple(jnp.asarray(a) for a in block.arrays),
-                    t=t, method=method)
+                    t=t, method=method, measure=measure)
             masks = np.asarray(masks_dev)
             for lk in range(block.n_local):
                 rr, ss = np.nonzero(masks[lk])
@@ -527,6 +549,7 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         stats["psi"] = part.psi
         stats["n_shards"] = part.n_shards
         stats["emit"] = emit
+        stats["measure"] = measure
         stats["result_pairs"] = n_result
         # compacted result bytes: 2 int32 ids per qualifying pair — the
         # quantity the paper's shuffle/disk accounting charges the reduce

@@ -5,8 +5,11 @@ faithfully, including the ``support`` mechanism that merges root-walks of
 multiple elements of the same ``R_i`` whose ``L(a)`` nodes lie on one root
 path. ``cf_rs_join_lfvt`` runs the same traversal over the compressed tree.
 
-Pair semantics (float64): ``(r, s)`` qualifies iff
-``f / (|R| + |S| - f) >= t``.
+Pair semantics: ``(r, s)`` qualifies iff ``sim(f, |R|, |S|) >= t`` for the
+chosen measure (Jaccard/Cosine/Dice/Overlap — DESIGN.md §8).
+``brute_force_join`` evaluates the float64 similarity directly; the tree
+traversals use the measure's integer-exact predicate and per-measure size
+window.
 """
 from __future__ import annotations
 
@@ -15,7 +18,8 @@ import math
 import numpy as np
 
 from .fvt import FVT, LFVT
-from .sets import SetCollection, jaccard
+from .measures import get_measure, numpy_qualify
+from .sets import SetCollection, similarity
 
 __all__ = [
     "brute_force_join",
@@ -25,26 +29,21 @@ __all__ = [
 ]
 
 
-def _qualifies(f: int, r_size: int, s_size: int, t: float) -> bool:
-    union = r_size + s_size - f
-    return union > 0 and (f / union) >= t
-
-
-def pairs_from_counts(counts, r_ids, r_sizes, s_ids, s_sizes, t) -> set:
+def pairs_from_counts(counts, r_ids, r_sizes, s_ids, s_sizes, t,
+                      measure: str = "jaccard") -> set:
     """Threshold an (m, n) intersection-count matrix into a pair set."""
-    counts = np.asarray(counts, dtype=np.float64)
-    union = r_sizes[:, None].astype(np.float64) + s_sizes[None, :] - counts
-    mask = (counts >= t * union) & (union > 0) & (counts > 0)
+    mask = numpy_qualify(counts, r_sizes, s_sizes, t, measure)
     rr, ss = np.nonzero(mask)
     return {(int(r_ids[i]), int(s_ids[j])) for i, j in zip(rr, ss)}
 
 
-def brute_force_join(R: SetCollection, S: SetCollection, t: float) -> set:
-    """O(m*n) oracle."""
+def brute_force_join(R: SetCollection, S: SetCollection, t: float,
+                     measure: str = "jaccard") -> set:
+    """O(m*n) float64 oracle."""
     out = set()
     for i, Ri in enumerate(R.sets):
         for j, Sj in enumerate(S.sets):
-            if len(Ri) and len(Sj) and jaccard(Ri, Sj) >= t:
+            if len(Ri) and len(Sj) and similarity(Ri, Sj, measure) >= t:
                 out.add((int(R.ids[i]), int(S.ids[j])))
     return out
 
@@ -53,16 +52,18 @@ def brute_force_join(R: SetCollection, S: SetCollection, t: float) -> set:
 # Algorithm 1 — CF-RS-Join/FVT
 # ---------------------------------------------------------------------- #
 def cf_rs_join_fvt(R: SetCollection, S: SetCollection, t: float,
-                   tree: FVT | None = None, stats: dict | None = None) -> set:
+                   tree: FVT | None = None, stats: dict | None = None,
+                   measure: str = "jaccard") -> set:
     tree = tree if tree is not None else FVT(S)
+    m = get_measure(measure)
     pairs: set = set()
     visited = 0
     for i, Ri in enumerate(R.sets):
         if not len(Ri):
             continue
         r_size = len(Ri)
-        r_min = math.ceil(r_size * t)
-        r_max = math.floor(r_size / t)
+        r_min, r_max = m.size_window(r_size, t)
+        r_max = math.inf if r_max is None else r_max
         # N: the L(a) start nodes, sorted by |seq(a)| ascending (Alg.1 l.8)
         starts = []
         for a in Ri:
@@ -87,7 +88,7 @@ def cf_rs_join_fvt(R: SetCollection, S: SetCollection, t: float,
                     f[node.set_id] = (c + support, sz)
                 node = node.parent
         for sid, (cnt, sz) in f.items():
-            if _qualifies(cnt, r_size, sz, t):
+            if m.qualifies(cnt, r_size, sz, t):
                 pairs.add((int(R.ids[i]), sid))
     if stats is not None:
         stats["nodes_visited"] = visited
@@ -99,16 +100,18 @@ def cf_rs_join_fvt(R: SetCollection, S: SetCollection, t: float,
 # CF-RS-Join/LFVT — same traversal over the compressed tree
 # ---------------------------------------------------------------------- #
 def cf_rs_join_lfvt(R: SetCollection, S: SetCollection, t: float,
-                    tree: LFVT | None = None, stats: dict | None = None) -> set:
+                    tree: LFVT | None = None, stats: dict | None = None,
+                    measure: str = "jaccard") -> set:
     tree = tree if tree is not None else LFVT(S)
+    m = get_measure(measure)
     pairs: set = set()
     visited = 0
     for i, Ri in enumerate(R.sets):
         if not len(Ri):
             continue
         r_size = len(Ri)
-        r_min = math.ceil(r_size * t)
-        r_max = math.floor(r_size / t)
+        r_min, r_max = m.size_window(r_size, t)
+        r_max = math.inf if r_max is None else r_max
         # starts: (node, offset) positions, sorted by |seq(a)| ascending
         starts = []
         for a in Ri:
@@ -140,7 +143,7 @@ def cf_rs_join_lfvt(R: SetCollection, S: SetCollection, t: float,
                     node = node.parent
                     off = len(node.tuples) - 1
         for sid, (cnt, sz) in f.items():
-            if _qualifies(cnt, r_size, sz, t):
+            if m.qualifies(cnt, r_size, sz, t):
                 pairs.add((int(R.ids[i]), sid))
     if stats is not None:
         stats["nodes_visited"] = visited

@@ -2,7 +2,8 @@
 
 The map phase routes every ``S_j`` to the single shard owning its length
 and every ``R_i`` to *all* shards whose S-length interval intersects the
-Lemma-3.1 window ``[ceil(t|R|), floor(|R|/t)]``. Shard boundaries minimize
+per-measure size window (Lemma 3.1 generalized, DESIGN.md §8 — for
+Jaccard ``[ceil(t|R|), floor(|R|/t)]``). Shard boundaries minimize
 the heaviest shard load ``psi`` via the dynamic program of Eq. 2, where a
 shard's load (Eq. 3) models its search phase (R elements x S sets in
 range) plus its build phase (S elements in range).
@@ -17,6 +18,7 @@ import dataclasses
 
 import numpy as np
 
+from .measures import SIZE_INF, get_measure
 from .sets import SetCollection
 
 __all__ = ["Partitioning", "load_aware_partition", "hash_partition", "route"]
@@ -30,6 +32,7 @@ class Partitioning:
     t: float
     psi: float  # DP estimate of the heaviest shard load
     strategy: str = "load_aware"
+    measure: str = "jaccard"
 
     @property
     def n_shards(self) -> int:
@@ -43,8 +46,8 @@ class Partitioning:
         return 0 if size < self.intervals[0][0] else self.n_shards - 1
 
     def r_shards(self, size: int) -> list[int]:
-        lo = int(np.ceil(size * self.t))
-        hi = int(np.floor(size / self.t))
+        lo, hi = get_measure(self.measure).size_window(size, self.t)
+        hi = int(SIZE_INF) if hi is None else hi
         return [
             k for k, (lb, rb) in enumerate(self.intervals)
             if not (hi < lb or lo > rb)
@@ -59,11 +62,19 @@ def _length_histograms(R: SetCollection, S: SetCollection):
 
 
 def _load(lb: int, rb: int, Cr: np.ndarray, Cs: np.ndarray, t: float,
-          pref_i_cr: np.ndarray, pref_cs: np.ndarray, pref_i_cs: np.ndarray) -> float:
-    """Eq. 3 via prefix sums: search load + build load of shard [lb, rb]."""
+          pref_i_cr: np.ndarray, pref_cs: np.ndarray, pref_i_cs: np.ndarray,
+          measure: str = "jaccard") -> float:
+    """Eq. 3 via prefix sums: search load + build load of shard [lb, rb].
+
+    Eligible R sizes are those whose per-measure window reaches [lb, rb]:
+    the window bounds are mutually inverse for all four measures, so the
+    range is [lo(lb), hi(rb)] (Jaccard: [ceil(t·lb), floor(rb/t)]).
+    """
+    m = get_measure(measure)
     L = len(pref_cs) - 2  # max representable length
-    r_lo = min(int(np.ceil(lb * t)), L)
-    r_hi = min(int(np.floor(rb / t)), L)
+    r_lo = min(int(m.size_window(lb, t)[0]), L)
+    hi = m.size_window(rb, t)[1]
+    r_hi = L if hi is None else min(int(hi), L)
     r_elems = pref_i_cr[r_hi + 1] - pref_i_cr[r_lo] if r_hi >= r_lo else 0.0
     s_sets = pref_cs[rb + 1] - pref_cs[lb]
     s_elems = pref_i_cs[rb + 1] - pref_i_cs[lb]
@@ -71,12 +82,13 @@ def _load(lb: int, rb: int, Cr: np.ndarray, Cs: np.ndarray, t: float,
 
 
 def load_aware_partition(R: SetCollection, S: SetCollection, t: float,
-                         n_shards: int) -> Partitioning:
+                         n_shards: int, measure: str = "jaccard") -> Partitioning:
     """Eq. 2 dynamic program over distinct S lengths (O(L^2 * l))."""
+    m = get_measure(measure)
     Cr, Cs, max_len = _length_histograms(R, S)
     lengths = np.nonzero(Cs)[0]
     if len(lengths) == 0:
-        return Partitioning([(1, max_len)], t, 0.0)
+        return Partitioning([(1, max_len)], t, 0.0, measure=m.name)
     lmin, lmax = int(lengths[0]), int(lengths[-1])
     # prefix sums for O(1) Eq.3 evaluation
     i_arr = np.arange(len(Cr), dtype=np.float64)
@@ -85,7 +97,8 @@ def load_aware_partition(R: SetCollection, S: SetCollection, t: float,
     pref_i_cs = np.concatenate([[0.0], np.cumsum(i_arr * Cs)])
 
     def load(lb, rb):
-        return _load(lb, rb, Cr, Cs, t, pref_i_cr, pref_cs, pref_i_cs)
+        return _load(lb, rb, Cr, Cs, t, pref_i_cr, pref_cs, pref_i_cs,
+                     measure=m.name)
 
     # DP over candidate boundaries = the distinct occupied lengths
     cand = [int(x) for x in lengths]  # ascending
@@ -115,11 +128,12 @@ def load_aware_partition(R: SetCollection, S: SetCollection, t: float,
         k, l = c, l - 1
     intervals.append((lmin, hi))
     intervals.reverse()
-    return Partitioning(intervals, t, float(psi[n_shards][K - 1]))
+    return Partitioning(intervals, t, float(psi[n_shards][K - 1]),
+                        measure=m.name)
 
 
 def hash_partition(R: SetCollection, S: SetCollection, t: float,
-                   n_shards: int) -> Partitioning:
+                   n_shards: int, measure: str = "jaccard") -> Partitioning:
     """Paper §5.3.1 baseline: full S on every shard, R split evenly.
 
     Encoded as a single all-covering interval repeated; ``route`` special-
@@ -127,7 +141,7 @@ def hash_partition(R: SetCollection, S: SetCollection, t: float,
     """
     _, _, max_len = _length_histograms(R, S)
     return Partitioning([(1, max_len)] * n_shards, t, float("nan"),
-                        strategy="hash")
+                        strategy="hash", measure=get_measure(measure).name)
 
 
 def _grouped_rows(rows: np.ndarray, shards: np.ndarray, n: int):
@@ -167,9 +181,9 @@ def route(R: SetCollection, S: SetCollection, part: Partitioning):
         rows_s = np.arange(len(S), dtype=np.int64)
         shards_s = np.clip(np.searchsorted(rbs, s_sizes.astype(np.int64)),
                            0, n - 1)
-        # R: every shard whose interval intersects the Lemma-3.1 window
-        lo = np.ceil(r_sizes.astype(np.float64) * part.t).astype(np.int64)
-        hi = np.floor(r_sizes.astype(np.float64) / part.t).astype(np.int64)
+        # R: every shard whose interval intersects the per-measure window
+        lo, hi = get_measure(part.measure).size_window_arrays(
+            r_sizes.astype(np.int64), part.t)
         k_lo = np.searchsorted(rbs, lo)                      # first rb >= lo
         k_hi = np.searchsorted(lbs, hi, side="right") - 1    # last lb <= hi
         reps = np.maximum(k_hi - k_lo + 1, 0)

@@ -20,7 +20,7 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["SetCollection", "length_filter_bounds", "jaccard"]
+__all__ = ["SetCollection", "length_filter_bounds", "jaccard", "similarity"]
 
 
 def _as_ragged(sets: Sequence[np.ndarray]) -> list[np.ndarray]:
@@ -168,8 +168,23 @@ def jaccard(a: np.ndarray, b: np.ndarray) -> float:
     return inter / union if union else 1.0
 
 
-def length_filter_bounds(r_size: int | np.ndarray, t: float):
-    """Lemma 3.1: Jaccard(R,S) >= t implies ceil(t|R|) <= |S| <= floor(|R|/t)."""
-    lo = np.ceil(np.asarray(r_size, dtype=np.float64) * t).astype(np.int64)
-    hi = np.floor(np.asarray(r_size, dtype=np.float64) / t).astype(np.int64)
+def similarity(a: np.ndarray, b: np.ndarray,
+               measure: str = "jaccard") -> float:
+    """Float64 reference similarity of two element-sorted sets."""
+    from .measures import get_measure  # deferred: sets is a leaf module
+    inter = len(np.intersect1d(a, b, assume_unique=True))
+    return get_measure(measure).similarity(inter, len(a), len(b))
+
+
+def length_filter_bounds(r_size: int | np.ndarray, t: float,
+                         measure: str = "jaccard"):
+    """Lemma 3.1 size window, generalized per measure (DESIGN.md §8).
+
+    Jaccard: ceil(t|R|) <= |S| <= floor(|R|/t); see
+    ``measures.Measure.size_window`` for the other three. Integer-exact
+    (the threshold is resolved to a rational, no float ceil/floor).
+    """
+    from .measures import get_measure
+    lo, hi = get_measure(measure).size_window_arrays(
+        np.asarray(r_size, dtype=np.int64), t)
     return lo, hi

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import measures
 from .sets import SetCollection
 
 __all__ = [
@@ -97,23 +98,30 @@ def _membership_block(padded: jax.Array, start, block: int) -> jax.Array:
 
 
 def qualify(counts: jax.Array, r_sizes: jax.Array, s_sizes: jax.Array,
-            t: float) -> jax.Array:
-    """Jaccard >= t as a boolean tile: f*(1+t) >= t*(|R|+|S|), f > 0."""
-    f = counts.astype(jnp.float32)
-    rhs = t * (r_sizes[:, None] + s_sizes[None, :]).astype(jnp.float32)
-    return (f * (1.0 + t) >= rhs) & (counts > 0)
+            t: float, measure: str = "jaccard") -> jax.Array:
+    """``sim >= t`` as a boolean tile via the integer-exact cross-multiplied
+    predicate (DESIGN.md §8); f > 0 required.
+
+    Replaces the float32 form ``f*(1+t) >= t*(|R|+|S|)``, which
+    misclassifies exact-boundary pairs (e.g. |R|=|S|=5, f=4 at t=2/3 —
+    see tests/test_measures.py::test_float32_boundary_regression).
+    """
+    return measures.device_qualify(counts, r_sizes[:, None],
+                                   s_sizes[None, :], t, measure)
 
 
-def window_bounds(r_sizes: np.ndarray, s_sizes_desc: np.ndarray, t: float):
-    """Column window [lo, hi) per R row over size-descending S (Lemma 3.1).
+def window_bounds(r_sizes: np.ndarray, s_sizes_desc: np.ndarray, t: float,
+                  measure: str = "jaccard"):
+    """Column window [lo, hi) per R row over size-descending S (Lemma 3.1,
+    generalized per measure — DESIGN.md §8).
 
     ``s_sizes_desc`` must be non-increasing. Rows outside the window can be
     skipped entirely (Theorem 3.3 / tile early stop).
     """
     asc = s_sizes_desc[::-1]
     n = len(asc)
-    hi_size = np.floor(r_sizes.astype(np.float64) / t)      # inclusive max size
-    lo_size = np.ceil(r_sizes.astype(np.float64) * t)       # inclusive min size
+    lo_size, hi_size = measures.get_measure(measure).size_window_arrays(
+        np.asarray(r_sizes, dtype=np.int64), t)  # inclusive, integer-exact
     # first index (in desc order) with size <= hi_size:
     lo = n - np.searchsorted(asc, hi_size, side="right")
     # one past last index with size >= lo_size:
@@ -124,20 +132,22 @@ def window_bounds(r_sizes: np.ndarray, s_sizes_desc: np.ndarray, t: float):
 # ---------------------------------------------------------------------- #
 # host driver — streams R blocks, emits qualifying pairs
 # ---------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("t",))
-def _popcount_qualify(r_bm, r_sz, s_bm, s_sz, col_lo, col_hi, *, t):
+@functools.partial(jax.jit, static_argnames=("t", "measure"))
+def _popcount_qualify(r_bm, r_sz, s_bm, s_sz, col_lo, col_hi, *, t,
+                      measure="jaccard"):
     counts = popcount_counts(r_bm, s_bm)
     cols = jnp.arange(s_bm.shape[0])[None, :]
     in_window = (cols >= col_lo[:, None]) & (cols < col_hi[:, None])
-    return qualify(counts, r_sz, s_sz, t) & in_window
+    return qualify(counts, r_sz, s_sz, t, measure) & in_window
 
 
-@functools.partial(jax.jit, static_argnames=("t", "universe"))
-def _onehot_qualify(r_pad, r_sz, s_pad, s_sz, col_lo, col_hi, *, t, universe):
+@functools.partial(jax.jit, static_argnames=("t", "universe", "measure"))
+def _onehot_qualify(r_pad, r_sz, s_pad, s_sz, col_lo, col_hi, *, t, universe,
+                    measure="jaccard"):
     counts = onehot_counts(r_pad, r_sz, s_pad, s_sz, universe)
     cols = jnp.arange(s_pad.shape[0])[None, :]
     in_window = (cols >= col_lo[:, None]) & (cols < col_hi[:, None])
-    return qualify(counts, r_sz, s_sz, t) & in_window
+    return qualify(counts, r_sz, s_sz, t, measure) & in_window
 
 
 # Capacity rounding for the jitted compactions (static output size):
@@ -269,11 +279,14 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                       method: str = "popcount", r_block: int = 1024,
                       stats: dict | None = None, emit: str = "pairs",
                       pair_capacity: int | None = None,
-                      double_buffer: bool = True) -> set:
+                      double_buffer: bool = True,
+                      measure: str = "jaccard") -> set:
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
             | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU).
+    measure: 'jaccard' | 'cosine' | 'dice' | 'overlap' (DESIGN.md §8) —
+            the qualify predicate and Lemma-3.1 window both specialize.
     emit:   'pairs' (default) — qualifying pairs are compacted on device
             and only the packed (row, col) int32 array crosses the host
             boundary (output bytes ~ result size; kernel methods also run
@@ -301,7 +314,10 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
     W = max((universe + 31) // 32, 1)
     Ss, s_rep, s_sz, s_sizes = _s_device_rep(S, family, W, stats)
     r_sizes_all = R.sizes()
-    lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t)
+    # int32 exactness guard for the device predicate (DESIGN.md §8)
+    measures.get_measure(measure).validate(
+        t, max(int(r_sizes_all.max(initial=0)), int(s_sizes.max(initial=0))))
+    lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t, measure)
 
     kernel_pairs = method in ("kernel_bitmap", "kernel_onehot") and (
         emit == "pairs")
@@ -332,21 +348,24 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             # live-tile schedule + in-kernel counts; count sync deferred
             if method == "kernel_bitmap":
                 blk["pending"] = kops.bitmap_join_pairs_dispatch(
-                    r_rep, r_sz, s_rep, s_sz, lo, hi, t)
+                    r_rep, r_sz, s_rep, s_sz, lo, hi, t, measure=measure)
             else:
                 blk["pending"] = kops.onehot_join_pairs_dispatch(
-                    r_rep, r_sz, s_rep, s_sz, lo, hi, t, universe=universe)
+                    r_rep, r_sz, s_rep, s_sz, lo, hi, t, universe=universe,
+                    measure=measure)
             return blk
         if method == "popcount":
-            mask = _popcount_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t)
+            mask = _popcount_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t,
+                                     measure=measure)
         elif method == "onehot":
             mask = _onehot_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t,
-                                   universe=universe)
+                                   universe=universe, measure=measure)
         elif method == "kernel_bitmap":
-            mask = kops.bitmap_join(r_rep, r_sz, s_rep, s_sz, lo, hi, t)
+            mask = kops.bitmap_join(r_rep, r_sz, s_rep, s_sz, lo, hi, t,
+                                    measure=measure)
         elif method == "kernel_onehot":
             mask = kops.onehot_join(r_rep, r_sz, s_rep, s_sz, lo, hi, t,
-                                    universe)
+                                    universe, measure=measure)
         else:
             raise ValueError(f"unknown method {method!r}")
         blk["mask"] = mask
@@ -410,6 +429,7 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
 
     if stats is not None:
         stats["method"] = method
+        stats["measure"] = measure
         stats["emit"] = emit
         stats["r_blocks"] = -(-m // r_block)
         stats["pair_count"] = acc["n_pairs"]

@@ -27,6 +27,7 @@ class DedupPipeline:
     n_shards: int = 8
     shingle: int = 1
     method: str = "popcount"
+    measure: str = "jaccard"       # DESIGN.md §8: cosine/dice/overlap too
     mesh: object = None
 
     stats: dict = dataclasses.field(default_factory=dict)
@@ -36,7 +37,8 @@ class DedupPipeline:
         R = docs_to_sets(docs, self.shingle, universe=self.curated.universe)
         stats: dict = {}
         pairs = mr_cf_rs_join(R, self.curated, self.threshold, self.n_shards,
-                              method=self.method, mesh=self.mesh, stats=stats)
+                              method=self.method, mesh=self.mesh, stats=stats,
+                              measure=self.measure)
         dup_rows = {r for (r, _) in pairs}
         keep = np.asarray([i for i in range(len(docs)) if i not in dup_rows],
                           dtype=np.int64)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import measures
+
 __all__ = ["bitmap_join_tiled", "bitmap_join_live_tiled", "DEFAULT_TILES"]
 
 # (TM, TN, TW). HBM traffic per output tile ~ (TM+TN)*TW*4 per k-step, so
@@ -49,17 +51,23 @@ def _popcount_accumulate(r_bm_ref, s_bm_ref, acc_ref):
     )
 
 
-def _qualify_tile(acc, r_sz_ref, s_sz_ref, lo_ref, hi_ref, j, *, t, tn):
-    """Threshold + Lemma-3.1 window for one (TM, TN) tile at column-tile j."""
-    f = acc.astype(jnp.float32)
-    sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)  # (TM,1)+(1,TN)
+def _qualify_tile(acc, r_sz_ref, s_sz_ref, lo_ref, hi_ref, j, *, t, measure,
+                  tn):
+    """Threshold + size window for one (TM, TN) tile at column-tile j.
+
+    The predicate is the measure's integer-exact cross-multiplied
+    comparison (int32 VPU ops — DESIGN.md §8), not float32: the float form
+    misclassifies exact-boundary pairs.
+    """
     cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
     in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
-    return (f * (1.0 + t) >= t * sizes) & (acc > 0) & in_window
+    q = measures.device_qualify(acc, r_sz_ref[...], s_sz_ref[...], t, measure)
+    return q & in_window
 
 
 def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
-            out_ref, acc_ref, *, t: float, n_kblocks: int, tn: int):
+            out_ref, acc_ref, *, t: float, measure: str, n_kblocks: int,
+            tn: int):
     # program_id must be read outside pl.when bodies: the interpreter only
     # substitutes it at kernel-trace time, not inside cond branch jaxprs.
     j = pl.program_id(1)
@@ -76,14 +84,16 @@ def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
     @pl.when(k == n_kblocks - 1)
     def _qualify():
         out_ref[...] = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref,
-                                     lo_ref, hi_ref, j, t=t, tn=tn)
+                                     lo_ref, hi_ref, j, t=t, measure=measure,
+                                     tn=tn)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("t", "tiles", "interpret")
+    jax.jit, static_argnames=("t", "measure", "tiles", "interpret")
 )
 def bitmap_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
-                      *, t: float, tiles=DEFAULT_TILES, interpret: bool = False):
+                      *, t: float, measure: str = "jaccard",
+                      tiles=DEFAULT_TILES, interpret: bool = False):
     """All inputs pre-padded to tile multiples; see ops.bitmap_join.
 
     r_bitmaps (M, W) uint32 | s_bitmaps (N, W) uint32
@@ -96,7 +106,8 @@ def bitmap_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
     assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
     grid = (M // TM, N // TN, W // TW)
 
-    kernel = functools.partial(_kernel, t=t, n_kblocks=grid[2], tn=TN)
+    kernel = functools.partial(_kernel, t=t, measure=measure,
+                               n_kblocks=grid[2], tn=TN)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -121,7 +132,7 @@ def bitmap_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
 # ---------------------------------------------------------------------- #
 def _live_kernel(ti_ref, tj_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref,
                  lo_ref, hi_ref, mask_ref, cnt_ref, acc_ref, *,
-                 t: float, n_kblocks: int, tn: int):
+                 t: float, measure: str, n_kblocks: int, tn: int):
     l = pl.program_id(0)
     k = pl.program_id(1)
     j = tj_ref[l]  # column-tile coordinate of this live tile
@@ -136,14 +147,16 @@ def _live_kernel(ti_ref, tj_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref,
     @pl.when(k == n_kblocks - 1)
     def _emit():
         q = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref, lo_ref, hi_ref,
-                          j, t=t, tn=tn)
+                          j, t=t, measure=measure, tn=tn)
         mask_ref[...] = q[None]
         cnt_ref[...] = jnp.sum(q, dtype=jnp.int32).reshape(1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "tiles", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("t", "measure", "tiles", "interpret"))
 def bitmap_join_live_tiled(tile_i, tile_j, r_bitmaps, r_sizes, s_bitmaps,
-                           s_sizes, lo, hi, *, t: float, tiles=DEFAULT_TILES,
+                           s_sizes, lo, hi, *, t: float,
+                           measure: str = "jaccard", tiles=DEFAULT_TILES,
                            interpret: bool = False):
     """Popcount join over the live tiles only; see ops.bitmap_join_pairs.
 
@@ -160,7 +173,8 @@ def bitmap_join_live_tiled(tile_i, tile_j, r_bitmaps, r_sizes, s_bitmaps,
     assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
     grid = (L, W // TW)
 
-    kernel = functools.partial(_live_kernel, t=t, n_kblocks=grid[1], tn=TN)
+    kernel = functools.partial(_live_kernel, t=t, measure=measure,
+                               n_kblocks=grid[1], tn=TN)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,

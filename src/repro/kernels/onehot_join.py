@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import measures
+
 __all__ = ["onehot_join_tiled", "onehot_join_live_tiled", "DEFAULT_TILES"]
 
 # (TM, TN, TW): matmul K = TW*32 = 256 (MXU-aligned); TN=256 halves S-side
@@ -48,16 +50,19 @@ def _matmul_accumulate(r_bm_ref, s_bm_ref, acc_ref):
     )
 
 
-def _qualify_tile(f, r_sz_ref, s_sz_ref, lo_ref, hi_ref, j, *, t, tn):
-    counts = f.astype(jnp.int32)
-    sizes = (r_sz_ref[...] + s_sz_ref[...]).astype(jnp.float32)
+def _qualify_tile(f, r_sz_ref, s_sz_ref, lo_ref, hi_ref, j, *, t, measure,
+                  tn):
+    # the f32 accumulator holds exact integer counts (< 2^24): the
+    # measure predicate casts to int32 and compares integer-exactly
     cols = j * tn + jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
     in_window = (cols >= lo_ref[...]) & (cols < hi_ref[...])
-    return (f * (1.0 + t) >= t * sizes) & (counts > 0) & in_window
+    q = measures.device_qualify(f, r_sz_ref[...], s_sz_ref[...], t, measure)
+    return q & in_window
 
 
 def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
-            out_ref, acc_ref, *, t: float, n_kblocks: int, tn: int):
+            out_ref, acc_ref, *, t: float, measure: str, n_kblocks: int,
+            tn: int):
     # program_id read outside pl.when bodies (interpret-mode requirement)
     j = pl.program_id(1)
     k = pl.program_id(2)
@@ -73,12 +78,15 @@ def _kernel(skip_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref, lo_ref, hi_ref,
     @pl.when(k == n_kblocks - 1)
     def _qualify():
         out_ref[...] = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref,
-                                     lo_ref, hi_ref, j, t=t, tn=tn)
+                                     lo_ref, hi_ref, j, t=t, measure=measure,
+                                     tn=tn)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "tiles", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("t", "measure", "tiles", "interpret"))
 def onehot_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
-                      *, t: float, tiles=DEFAULT_TILES, interpret: bool = False):
+                      *, t: float, measure: str = "jaccard",
+                      tiles=DEFAULT_TILES, interpret: bool = False):
     """Same contract as bitmap_join_tiled; MXU execution."""
     TM, TN, TW = tiles
     M, W = r_bitmaps.shape
@@ -86,7 +94,8 @@ def onehot_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
     assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
     grid = (M // TM, N // TN, W // TW)
 
-    kernel = functools.partial(_kernel, t=t, n_kblocks=grid[2], tn=TN)
+    kernel = functools.partial(_kernel, t=t, measure=measure,
+                               n_kblocks=grid[2], tn=TN)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -111,7 +120,7 @@ def onehot_join_tiled(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, skip,
 # ---------------------------------------------------------------------- #
 def _live_kernel(ti_ref, tj_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref,
                  lo_ref, hi_ref, mask_ref, cnt_ref, acc_ref, *,
-                 t: float, n_kblocks: int, tn: int):
+                 t: float, measure: str, n_kblocks: int, tn: int):
     l = pl.program_id(0)
     k = pl.program_id(1)
     j = tj_ref[l]  # column-tile coordinate of this live tile
@@ -126,14 +135,16 @@ def _live_kernel(ti_ref, tj_ref, r_bm_ref, s_bm_ref, r_sz_ref, s_sz_ref,
     @pl.when(k == n_kblocks - 1)
     def _emit():
         q = _qualify_tile(acc_ref[...], r_sz_ref, s_sz_ref, lo_ref, hi_ref,
-                          j, t=t, tn=tn)
+                          j, t=t, measure=measure, tn=tn)
         mask_ref[...] = q[None]
         cnt_ref[...] = jnp.sum(q, dtype=jnp.int32).reshape(1, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "tiles", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("t", "measure", "tiles", "interpret"))
 def onehot_join_live_tiled(tile_i, tile_j, r_bitmaps, r_sizes, s_bitmaps,
-                           s_sizes, lo, hi, *, t: float, tiles=DEFAULT_TILES,
+                           s_sizes, lo, hi, *, t: float,
+                           measure: str = "jaccard", tiles=DEFAULT_TILES,
                            interpret: bool = False):
     """MXU join over the live tiles only; contract of bitmap_join_live_tiled."""
     TM, TN, TW = tiles
@@ -143,7 +154,8 @@ def onehot_join_live_tiled(tile_i, tile_j, r_bitmaps, r_sizes, s_bitmaps,
     assert M % TM == 0 and N % TN == 0 and W % TW == 0, (M, N, W, tiles)
     grid = (L, W // TW)
 
-    kernel = functools.partial(_live_kernel, t=t, n_kblocks=grid[1], tn=TN)
+    kernel = functools.partial(_live_kernel, t=t, measure=measure,
+                               n_kblocks=grid[1], tn=TN)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,

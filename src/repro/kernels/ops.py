@@ -135,19 +135,22 @@ def _prepare(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults):
 # dense-mask fallback
 # ---------------------------------------------------------------------- #
 def bitmap_join(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, t: float,
-                tiles=None, interpret: bool | None = None) -> jax.Array:
+                tiles=None, interpret: bool | None = None,
+                measure: str = "jaccard") -> jax.Array:
     """(m, n) bool qualifying-pair matrix via the popcount kernel."""
     interpret = _interpret_default() if interpret is None else interpret
     rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n = _prepare(
         r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, _bj.DEFAULT_TILES)
     out = _bj.bitmap_join_tiled(rb, r_sz, sb, s_sz, lo_p, hi_p, skip,
-                                t=t, tiles=tls, interpret=interpret)
+                                t=t, measure=measure, tiles=tls,
+                                interpret=interpret)
     return out[:m, :n]
 
 
 def onehot_join(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo, hi,
                 t: float, universe: int | None = None, tiles=None,
-                interpret: bool | None = None) -> jax.Array:
+                interpret: bool | None = None,
+                measure: str = "jaccard") -> jax.Array:
     """(m, n) bool qualifying-pair matrix via the MXU one-hot kernel.
 
     Accepts bitmaps directly; ``universe`` kept for API symmetry. If handed
@@ -158,7 +161,8 @@ def onehot_join(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo, hi,
     rb, r_sz, sb, s_sz, lo_p, hi_p, skip, tls, m, n = _prepare(
         r_in, r_sizes, s_in, s_sizes, lo, hi, tiles, _oj.DEFAULT_TILES)
     out = _oj.onehot_join_tiled(rb, r_sz, sb, s_sz, lo_p, hi_p, skip,
-                                t=t, tiles=tls, interpret=interpret)
+                                t=t, measure=measure, tiles=tls,
+                                interpret=interpret)
     return out[:m, :n]
 
 
@@ -214,7 +218,8 @@ class PendingPairs:
 
 
 def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
-                         s_sizes, lo, hi, t, tiles, interpret) -> PendingPairs:
+                         s_sizes, lo, hi, t, tiles, interpret,
+                         measure="jaccard") -> PendingPairs:
     """Launch the live-tile kernel; return device handles without syncing."""
     interpret = _interpret_default() if interpret is None else interpret
     rb, r_sz, sb, s_sz, lo_p, hi_p, tls, m, n = _pad_operands(
@@ -227,8 +232,8 @@ def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
         return PendingPairs(None, None, None, None, TM, TN, 0,
                             m_tiles * n_tiles, m * n)
     masks, counts = live_fn(jnp.asarray(ti), jnp.asarray(tj), rb, r_sz,
-                            sb, s_sz, lo_p, hi_p, t=t, tiles=tls,
-                            interpret=interpret)
+                            sb, s_sz, lo_p, hi_p, t=t, measure=measure,
+                            tiles=tls, interpret=interpret)
     return PendingPairs(masks, counts, jnp.asarray(ti), jnp.asarray(tj),
                         TM, TN, L, m_tiles * n_tiles, m * n)
 
@@ -268,16 +273,18 @@ def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
 
 
 def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
-                lo, hi, t, tiles, interpret, capacity, stats):
+                lo, hi, t, tiles, interpret, capacity, stats,
+                measure="jaccard"):
     pending = _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes,
                                    s_bitmaps, s_sizes, lo, hi, t, tiles,
-                                   interpret)
+                                   interpret, measure)
     return join_pairs_finalize(pending, capacity, stats)
 
 
 def bitmap_join_pairs(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
                       t: float, tiles=None, interpret: bool | None = None,
-                      capacity: int | None = None, stats: dict | None = None):
+                      capacity: int | None = None, stats: dict | None = None,
+                      measure: str = "jaccard"):
     """Sparse popcount join -> (pairs (P, 2) int32 device array, n_pairs).
 
     ``pairs[:n_pairs]`` are the qualifying (row, col) indices into the
@@ -287,38 +294,41 @@ def bitmap_join_pairs(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
     """
     return _join_pairs(_bj.bitmap_join_live_tiled, _bj.DEFAULT_TILES,
                        r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi,
-                       t, tiles, interpret, capacity, stats)
+                       t, tiles, interpret, capacity, stats, measure)
 
 
 def onehot_join_pairs(r_bitmaps_or_padded, r_sizes, s_bitmaps, s_sizes, lo,
                       hi, t: float, universe: int | None = None, tiles=None,
                       interpret: bool | None = None,
-                      capacity: int | None = None, stats: dict | None = None):
+                      capacity: int | None = None, stats: dict | None = None,
+                      measure: str = "jaccard"):
     """Sparse MXU join; same contract as ``bitmap_join_pairs``."""
     r_in, s_in = _coerce_bitmaps(r_bitmaps_or_padded, s_bitmaps, universe)
     return _join_pairs(_oj.onehot_join_live_tiled, _oj.DEFAULT_TILES,
                        r_in, r_sizes, s_in, s_sizes, lo, hi,
-                       t, tiles, interpret, capacity, stats)
+                       t, tiles, interpret, capacity, stats, measure)
 
 
 def bitmap_join_pairs_dispatch(r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo,
                                hi, t: float, tiles=None,
-                               interpret: bool | None = None) -> PendingPairs:
+                               interpret: bool | None = None,
+                               measure: str = "jaccard") -> PendingPairs:
     """Async half of ``bitmap_join_pairs``: launch, don't sync."""
     return _join_pairs_dispatch(_bj.bitmap_join_live_tiled, _bj.DEFAULT_TILES,
                                 r_bitmaps, r_sizes, s_bitmaps, s_sizes,
-                                lo, hi, t, tiles, interpret)
+                                lo, hi, t, tiles, interpret, measure)
 
 
 def onehot_join_pairs_dispatch(r_bitmaps_or_padded, r_sizes, s_bitmaps,
                                s_sizes, lo, hi, t: float,
                                universe: int | None = None, tiles=None,
-                               interpret: bool | None = None) -> PendingPairs:
+                               interpret: bool | None = None,
+                               measure: str = "jaccard") -> PendingPairs:
     """Async half of ``onehot_join_pairs``: launch, don't sync."""
     r_in, s_in = _coerce_bitmaps(r_bitmaps_or_padded, s_bitmaps, universe)
     return _join_pairs_dispatch(_oj.onehot_join_live_tiled, _oj.DEFAULT_TILES,
                                 r_in, r_sizes, s_in, s_sizes, lo, hi,
-                                t, tiles, interpret)
+                                t, tiles, interpret, measure)
 
 
 def join_pairs(method: str, *args, **kw):

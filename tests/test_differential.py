@@ -1,0 +1,241 @@
+"""Property-based differential harness (ISSUE 3 tentpole lock-down).
+
+Randomized collections — duplicate elements, empty sets, skewed sizes —
+joined by the float64 brute-force oracle vs every execution path:
+
+  host   : FVT, LFVT (Algorithm 1 traversals)
+  device : popcount / one-hot pure-jnp oracles, emit='pairs' and 'mask'
+  kernel : Pallas bitmap/onehot, dense tiled and live-tiled sparse emission
+  MR     : ``mr_cf_rs_join`` loop path (shard-sparse reduce)
+
+asserting bit-identical pair sets across all four measures and thresholds
+including the adversarial boundary value 2/3 (whose float32 evaluation
+drops exact-boundary pairs — see test_measures.py).
+
+The default profile is the quick one CI's tier-1 job runs; the
+``slow``-marked sweeps widen seeds/thresholds (run with ``-m slow``).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
+
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join, cf_rs_join_fvt, cf_rs_join_lfvt
+from repro.core.measures import measure_names
+from repro.core.sets import SetCollection
+from repro.core.tile_join import cf_rs_join_device
+
+MEASURES = measure_names()
+THRESHOLDS = (0.5, 0.7, 0.9, 2 / 3)
+
+
+# ---------------------------------------------------------------------- #
+# randomized collection generator
+# ---------------------------------------------------------------------- #
+def random_ragged(rng, n_sets, universe, max_size, skew=False,
+                  empty_frac=0.15, full_row=False):
+    """Ragged int lists with duplicate elements, empties and (optionally)
+    Zipfian-skewed sizes. ``full_row`` forces one max_size row so padded
+    shapes stay fixed across draws (bounds jit recompiles in the device
+    differential tests)."""
+    sets = []
+    for i in range(n_sets):
+        if full_row and i == 0:
+            sets.append(rng.choice(universe, size=max_size, replace=False))
+            continue
+        if rng.random() < empty_frac:
+            sets.append(np.zeros(0, np.int32))
+            continue
+        if skew:
+            size = int(min(max_size, rng.zipf(1.6)))
+        else:
+            size = int(rng.integers(1, max_size + 1))
+        # sampled WITH replacement: duplicate elements in the raw input
+        sets.append(rng.integers(0, universe, size=size))
+    return sets
+
+
+def random_collections(seed, m=15, n=18, universe=48, max_size=12,
+                       skew=False, full_row=False):
+    rng = np.random.default_rng(seed)
+    R = SetCollection.from_ragged(
+        random_ragged(rng, m, universe, max_size, skew, full_row=full_row),
+        universe=universe)
+    S = SetCollection.from_ragged(
+        random_ragged(rng, n, universe, max_size, skew, full_row=full_row),
+        universe=universe)
+    return R, S
+
+
+# ---------------------------------------------------------------------- #
+# host paths: FVT / LFVT vs brute force, full measure x threshold grid
+# ---------------------------------------------------------------------- #
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       max_size=st.sampled_from([3, 8, 16]),
+       skew=st.sampled_from([False, True]))
+def test_host_paths_all_measures(seed, max_size, skew):
+    R, S = random_collections(seed, max_size=max_size, skew=skew)
+    for measure in MEASURES:
+        for t in THRESHOLDS:
+            oracle = brute_force_join(R, S, t, measure)
+            assert cf_rs_join_fvt(R, S, t, measure=measure) == oracle, (
+                measure, t, seed)
+            assert cf_rs_join_lfvt(R, S, t, measure=measure) == oracle, (
+                measure, t, seed)
+
+
+# ---------------------------------------------------------------------- #
+# device jnp paths: popcount / one-hot, sparse + dense emission
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("measure", MEASURES)
+def test_device_paths_differential(measure):
+    for t in (0.5, 0.7, 2 / 3):
+        for seed in (0, 1, 3):
+            R, S = random_collections(seed + 100, full_row=True)
+            oracle = brute_force_join(R, S, t, measure)
+            got_p = cf_rs_join_device(R, S, t, method="popcount",
+                                      measure=measure)
+            assert got_p == oracle, ("popcount", measure, t, seed)
+            got_m = cf_rs_join_device(R, S, t, method="popcount",
+                                      emit="mask", measure=measure)
+            assert got_m == oracle, ("popcount/mask", measure, t, seed)
+            got_o = cf_rs_join_device(R, S, t, method="onehot",
+                                      measure=measure)
+            assert got_o == oracle, ("onehot", measure, t, seed)
+
+
+# ---------------------------------------------------------------------- #
+# Pallas kernel paths (interpret on CPU): live-tiled sparse + dense tiled
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("measure", MEASURES)
+def test_kernel_bitmap_differential(measure):
+    t = 2 / 3
+    R, S = random_collections(7, m=10, n=12, universe=40, max_size=8,
+                              full_row=True)
+    oracle = brute_force_join(R, S, t, measure)
+    stats: dict = {}
+    got = cf_rs_join_device(R, S, t, method="kernel_bitmap",
+                            measure=measure, stats=stats)
+    assert got == oracle, ("kernel_bitmap/pairs", measure)
+    assert stats["live_tiles"] <= stats["total_tiles"]
+    got_d = cf_rs_join_device(R, S, t, method="kernel_bitmap", emit="mask",
+                              measure=measure)
+    assert got_d == oracle, ("kernel_bitmap/mask", measure)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_kernel_onehot_differential(measure):
+    t = 0.5
+    R, S = random_collections(11, m=10, n=12, universe=40, max_size=8,
+                              full_row=True)
+    oracle = brute_force_join(R, S, t, measure)
+    got = cf_rs_join_device(R, S, t, method="kernel_onehot",
+                            measure=measure)
+    assert got == oracle, ("kernel_onehot/pairs", measure)
+
+
+# ---------------------------------------------------------------------- #
+# MR loop path: routing windows + shard-sparse reduce per measure
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("measure", MEASURES)
+def test_mr_loop_differential(measure):
+    for t in (0.5, 2 / 3):
+        for seed in (5, 6):
+            R, S = random_collections(seed, max_size=10, skew=(seed == 6))
+            oracle = brute_force_join(R, S, t, measure)
+            stats: dict = {}
+            got = mr_cf_rs_join(R, S, t, 3, measure=measure, stats=stats)
+            assert got == oracle, ("mr/pairs", measure, t, seed)
+            assert stats["measure"] == measure
+            got_m = mr_cf_rs_join(R, S, t, 3, emit="mask", measure=measure)
+            assert got_m == oracle, ("mr/mask", measure, t, seed)
+    # hash-routing ablation must agree too (full S everywhere)
+    R, S = random_collections(9, max_size=10)
+    t = 0.7
+    assert mr_cf_rs_join(R, S, t, 3, strategy="hash",
+                         measure=measure) == brute_force_join(R, S, t, measure)
+
+
+# ---------------------------------------------------------------------- #
+# engineered exact-boundary pairs (the float32 predicate's failure class)
+# ---------------------------------------------------------------------- #
+BOUNDARY_T = 2 / 3
+# per measure: (R_set, S_set) with similarity exactly 2/3
+BOUNDARY_PAIRS = {
+    # |R|=|S|=5, f=4: 4 / (5+5-4) = 2/3
+    "jaccard": ([0, 1, 2, 3, 4], [0, 1, 2, 3, 5]),
+    # |R|=|S|=3, f=2: cosine 2/3, dice 4/6, overlap 2/3
+    "cosine": ([0, 1, 2], [0, 1, 3]),
+    "dice": ([0, 1, 2], [0, 1, 3]),
+    "overlap": ([0, 1, 2], [0, 1, 3]),
+}
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_boundary_pair_on_every_path(measure):
+    r_set, s_set = BOUNDARY_PAIRS[measure]
+    R = SetCollection.from_ragged([np.array(r_set)], universe=8)
+    S = SetCollection.from_ragged([np.array(s_set)], universe=8)
+    expect = {(0, 0)}
+    assert brute_force_join(R, S, BOUNDARY_T, measure) == expect
+    assert cf_rs_join_fvt(R, S, BOUNDARY_T, measure=measure) == expect
+    assert cf_rs_join_lfvt(R, S, BOUNDARY_T, measure=measure) == expect
+    assert cf_rs_join_device(R, S, BOUNDARY_T, measure=measure) == expect
+    assert cf_rs_join_device(R, S, BOUNDARY_T, method="kernel_bitmap",
+                             measure=measure) == expect
+    assert mr_cf_rs_join(R, S, BOUNDARY_T, 2, measure=measure) == expect
+
+
+# ---------------------------------------------------------------------- #
+# degenerate shapes
+# ---------------------------------------------------------------------- #
+def test_empty_sides_all_measures():
+    R, _ = random_collections(3)
+    S_empty = SetCollection.from_ragged(
+        [np.zeros(0, np.int32) for _ in range(4)], universe=8)
+    none = SetCollection.from_ragged([], universe=8)
+    for measure in MEASURES:
+        assert brute_force_join(R, S_empty, 0.5, measure) == set()
+        assert cf_rs_join_device(R, S_empty, 0.5, measure=measure) == set()
+        assert cf_rs_join_fvt(R, S_empty, 0.5, measure=measure) == set()
+        assert cf_rs_join_device(none, R, 0.5, measure=measure) == set()
+        assert mr_cf_rs_join(R, S_empty, 0.5, 2, measure=measure) == set()
+
+
+# ---------------------------------------------------------------------- #
+# exhaustive sweeps (deselected by default; run with -m slow)
+# ---------------------------------------------------------------------- #
+@pytest.mark.slow
+@pytest.mark.parametrize("measure", MEASURES)
+@pytest.mark.parametrize("t", THRESHOLDS)
+def test_kernel_paths_full_grid_slow(measure, t):
+    for seed in (0, 1):
+        R, S = random_collections(seed + 40, m=12, n=14, universe=48,
+                                  max_size=10, full_row=True)
+        oracle = brute_force_join(R, S, t, measure)
+        assert cf_rs_join_device(R, S, t, method="kernel_bitmap",
+                                 measure=measure) == oracle
+        assert cf_rs_join_device(R, S, t, method="kernel_onehot",
+                                 measure=measure) == oracle
+        assert mr_cf_rs_join(R, S, t, 3, method="kernel_bitmap",
+                             measure=measure) == oracle
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       max_size=st.sampled_from([4, 12, 24]),
+       skew=st.sampled_from([False, True]))
+def test_device_paths_wide_slow(seed, max_size, skew):
+    R, S = random_collections(seed, max_size=max_size, skew=skew,
+                              full_row=True)
+    for measure in MEASURES:
+        for t in THRESHOLDS:
+            oracle = brute_force_join(R, S, t, measure)
+            assert cf_rs_join_device(R, S, t, measure=measure) == oracle
+            assert mr_cf_rs_join(R, S, t, 3, measure=measure) == oracle

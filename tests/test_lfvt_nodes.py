@@ -1,0 +1,142 @@
+"""Direct unit tests for LFVT node splitting, owner repair and walk.
+
+Covers the ISSUE 3 satellite: ``LFVT._split`` entries whose ``L(a)`` moves
+into the tail node, split-at-offset-0 avoidance, a seq ending mid-node
+without a split, and ``n_nodes`` accounting vs the FVT node count.
+"""
+import numpy as np
+import pytest
+
+from repro.core.fvt import FVT, LFVT, build_seqs
+from repro.core.sets import SetCollection
+
+
+def _empty_lfvt() -> LFVT:
+    return LFVT(SetCollection.from_ragged([], universe=1))
+
+
+def _bfs_nodes(tree: LFVT):
+    out, stack = [], list(tree.root.children)
+    while stack:
+        n = stack.pop()
+        out.append(n)
+        stack.extend(n.children)
+    return out
+
+
+def _walk_all(tree, elements):
+    return {a: list(tree.walk(a)) for a in elements}
+
+
+# size-descending 2-tuples for direct _insert driving
+A, B, C, D, E, X = (0, 5), (1, 4), (2, 3), (3, 2), (4, 3), (9, 9)
+
+
+def test_insert_chain_then_mid_node_entry_no_split():
+    tree = _empty_lfvt()
+    tree._insert(10, [A, B, C])
+    assert tree.n_nodes == 1
+    (node,) = tree.root.children
+    assert node.tuples == [A, B, C]
+    seq_len, n1, off = tree.element_table[10]
+    assert (seq_len, n1, off) == (3, node, 2)
+    assert 10 in node.owners
+    # a strict-prefix seq ends mid-node: L(a) points at the 2-tuple,
+    # NO split happens (paper §3.2 first bullet)
+    tree._insert(11, [A, B])
+    assert tree.n_nodes == 1
+    assert tree.element_table[11] == (2, node, 1)
+    assert list(tree.walk(11)) == [B, A]
+    assert list(tree.walk(10)) == [C, B, A]
+
+
+def test_split_moves_owner_entries_into_tail():
+    tree = _empty_lfvt()
+    tree._insert(10, [A, B, C])          # chain node [A, B, C]
+    tree._insert(11, [A, B])             # L(11) mid-node at offset 1
+    tree._insert(12, [A, B, C, D])       # extends: new node [D] below
+    assert tree.n_nodes == 2
+    # divergence after [A, B] forces a split at offset 2
+    tree._insert(13, [A, B, E])
+    assert tree.n_nodes == 4             # head [A,B], tail [C], [D], [E]
+    (head,) = tree.root.children
+    assert head.tuples == [A, B]
+    (tail,) = [c for c in head.children if c.tuples == [C]]
+    (enode,) = [c for c in head.children if c.tuples == [E]]
+    (dnode,) = tail.children
+    assert dnode.tuples == [D]
+    # owner repair: L(10) moved into the tail with rebased offset 0 ...
+    assert tree.element_table[10] == (3, tail, 0)
+    assert 10 in tail.owners and 10 not in head.owners
+    # ... L(11) stayed in the head at offset 1
+    assert tree.element_table[11] == (2, head, 1)
+    assert 11 in head.owners
+    # ... and deeper entries were untouched
+    assert tree.element_table[12] == (4, dnode, 0)
+    assert tree.element_table[13] == (3, enode, 0)
+    # tail inherited the children and their parent pointers were repaired
+    assert dnode.parent is tail and tail.parent is head
+    assert enode.parent is head
+    # walks still enumerate each seq reversed
+    assert list(tree.walk(10)) == [C, B, A]
+    assert list(tree.walk(11)) == [B, A]
+    assert list(tree.walk(12)) == [D, C, B, A]
+    assert list(tree.walk(13)) == [E, B, A]
+
+
+def test_split_at_offset_zero_is_avoided():
+    tree = _empty_lfvt()
+    tree._insert(10, [A, B])
+    # divergence at the FIRST tuple of the child: a sibling node is
+    # appended, never a split at offset 0 (which would leave an empty head)
+    tree._insert(11, [X])
+    assert tree.n_nodes == 2
+    assert sorted(len(c.tuples) for c in tree.root.children) == [1, 2]
+    assert all(len(n.tuples) >= 1 for n in _bfs_nodes(tree))
+    # same below the root: [A] then diverge at the child's first tuple
+    tree._insert(12, [A, X])
+    # [A, B] split at offset 1 (not 0): head [A] with tails [B], [X]
+    assert all(len(n.tuples) >= 1 for n in _bfs_nodes(tree))
+    assert list(tree.walk(12)) == [X, A]
+    assert list(tree.walk(10)) == [B, A]
+
+
+def test_walk_unknown_element_is_empty():
+    tree = _empty_lfvt()
+    tree._insert(10, [A])
+    assert list(tree.walk(999)) == []
+
+
+def test_owner_lists_match_element_table():
+    rng = np.random.default_rng(3)
+    S = SetCollection.from_ragged(
+        [rng.choice(30, size=rng.integers(1, 9), replace=False)
+         for _ in range(20)], universe=30)
+    tree = LFVT(S)
+    for a, (seq_len, node, off) in tree.element_table.items():
+        assert a in node.owners
+        assert 0 <= off < len(node.tuples)
+    for node in _bfs_nodes(tree):
+        for a in node.owners:
+            assert tree.element_table[a][1] is node
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 7])
+def test_n_nodes_accounting_vs_fvt(seed):
+    rng = np.random.default_rng(seed)
+    S = SetCollection.from_ragged(
+        [rng.choice(40, size=rng.integers(1, 12), replace=False)
+         for _ in range(24)], universe=40)
+    fvt, lfvt = FVT(S), LFVT(S)
+    nodes = _bfs_nodes(lfvt)
+    # n_nodes counts exactly the reachable nodes
+    assert lfvt.n_nodes == len(nodes)
+    # compression preserves the tuple multiset: one FVT node per 2-tuple
+    assert sum(len(n.tuples) for n in nodes) == fvt.n_nodes
+    # and never has more nodes than the uncompressed tree
+    assert lfvt.n_nodes <= fvt.n_nodes
+    assert all(len(n.tuples) >= 1 for n in nodes)
+    # both trees enumerate seq(a) reversed, for every element
+    seqs = build_seqs(S)
+    for a, seq in seqs.items():
+        assert list(lfvt.walk(a)) == list(reversed(seq)) == list(fvt.walk(a))

@@ -1,0 +1,257 @@
+"""Measure API units: predicate algebra, size windows, boundary regression.
+
+Covers the ISSUE 3 satellites:
+  * the float32 ``qualify`` borderline bug — a pinned exact-boundary pair
+    that the old predicate ``f*(1+t) >= t*(|R|+|S|)`` gets wrong and the
+    integer-exact cross-multiplied replacement gets right, end to end;
+  * per-measure ``window_bounds`` coverage: monotonicity, ``lo <= hi``,
+    and window-exactness (every qualifying pair falls inside; shrinking
+    any bound drops a qualifying pair).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
+
+from repro.core.join import brute_force_join
+from repro.core.measures import (SIZE_INF, get_measure, measure_names,
+                                 numpy_qualify, threshold_fraction)
+from repro.core.sets import SetCollection, length_filter_bounds, similarity
+from repro.core.tile_join import cf_rs_join_device, qualify, window_bounds
+
+MEASURES = measure_names()
+THRESHOLDS = (0.5, 0.7, 0.9, 2 / 3, 0.875, 0.375)
+
+
+# ---------------------------------------------------------------------- #
+# threshold rationalization
+# ---------------------------------------------------------------------- #
+def test_threshold_fraction_recovers_intended_rationals():
+    assert threshold_fraction(0.5) == (1, 2)
+    assert threshold_fraction(0.7) == (7, 10)
+    assert threshold_fraction(0.9) == (9, 10)
+    assert threshold_fraction(2 / 3) == (2, 3)
+    assert threshold_fraction(0.875) == (7, 8)
+    assert threshold_fraction(1.0) == (1, 1)
+
+
+def test_threshold_fraction_rejects_out_of_range():
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            threshold_fraction(bad)
+
+
+def test_get_measure_unknown():
+    with pytest.raises(ValueError):
+        get_measure("euclid")
+
+
+# ---------------------------------------------------------------------- #
+# exact predicate vs float64 reference similarity
+# ---------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(r=st.integers(min_value=1, max_value=200),
+       s=st.integers(min_value=1, max_value=200),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_qualifies_matches_float64_similarity(r, s, seed):
+    rng = np.random.default_rng(seed)
+    f = int(rng.integers(0, min(r, s) + 1))
+    for name in MEASURES:
+        m = get_measure(name)
+        for t in THRESHOLDS:
+            want = f > 0 and m.similarity(f, r, s) >= t
+            assert m.qualifies(f, r, s, t) == want, (name, t, f, r, s)
+
+
+@settings(max_examples=30, deadline=None)
+@given(r=st.integers(min_value=1, max_value=300),
+       s=st.integers(min_value=1, max_value=300))
+def test_min_overlap_is_tight(r, s):
+    for name in MEASURES:
+        m = get_measure(name)
+        for t in (0.5, 0.7, 2 / 3):
+            k = m.min_overlap(r, s, t)
+            assert k >= 1
+            if k <= min(r, s):  # k is a feasible intersection size
+                assert m.qualifies(k, r, s, t), (name, t, k, r, s)
+            assert not m.qualifies(k - 1, r, s, t), (name, t, k, r, s)
+
+
+def test_device_and_numpy_qualify_agree_with_exact():
+    rng = np.random.default_rng(0)
+    r = rng.integers(1, 60, size=12).astype(np.int32)
+    s = rng.integers(1, 60, size=15).astype(np.int32)
+    f = np.minimum(r[:, None], s[None, :])
+    f = (f * rng.random((12, 15))).astype(np.int32)  # feasible counts
+    for name in MEASURES:
+        m = get_measure(name)
+        for t in THRESHOLDS:
+            want = np.array([[m.qualifies(int(f[i, j]), int(r[i]), int(s[j]), t)
+                              for j in range(15)] for i in range(12)])
+            np.testing.assert_array_equal(
+                numpy_qualify(f, r, s, t, name), want, err_msg=f"{name}/{t}")
+            got_dev = np.asarray(qualify(jnp.asarray(f), jnp.asarray(r),
+                                         jnp.asarray(s), t, name))
+            np.testing.assert_array_equal(got_dev, want,
+                                          err_msg=f"dev {name}/{t}")
+
+
+# ---------------------------------------------------------------------- #
+# the float32 borderline bug (pinned regression)
+# ---------------------------------------------------------------------- #
+def _old_float32_qualify(f, r_size, s_size, t):
+    """The pre-ISSUE-3 predicate, verbatim float32 semantics."""
+    fv = np.float32(f)
+    rhs = np.float32(t) * np.float32(r_size + s_size)
+    return bool(fv * np.float32(1.0 + t) >= rhs) and f > 0
+
+
+def test_float32_boundary_regression():
+    # |R|=|S|=5, f=4 at t=2/3: Jaccard is exactly 4/6 = 2/3 — qualifying.
+    t, f, n = 2 / 3, 4, 5
+    assert get_measure("jaccard").similarity(f, n, n) >= t
+    # the old float32 predicate drops it (1+t and t*(r+s) round apart) ...
+    assert not _old_float32_qualify(f, n, n, t), (
+        "expected the old float32 predicate to misclassify the boundary "
+        "pair — if this now passes, the regression anchor is stale")
+    # ... the integer-exact replacement keeps it, at every level:
+    assert get_measure("jaccard").qualifies(f, n, n, t)
+    q = qualify(jnp.array([[f]], jnp.int32), jnp.array([n], jnp.int32),
+                jnp.array([n], jnp.int32), t)
+    assert bool(q[0, 0])
+    # end to end through the device join
+    R = SetCollection.from_ragged([np.arange(5)], universe=8)
+    S = SetCollection.from_ragged([np.array([0, 1, 2, 3, 5])], universe=8)
+    assert cf_rs_join_device(R, S, t) == {(0, 0)}
+    assert cf_rs_join_device(R, S, t, method="kernel_bitmap") == {(0, 0)}
+
+
+def test_float32_boundary_family():
+    # whole family |R|=|S|=5k, f=4k sits exactly at 2/3; the exact
+    # predicate must accept every member (the float32 form loses several)
+    t = 2 / 3
+    m = get_measure("jaccard")
+    old_wrong = 0
+    for k in range(1, 50):
+        f, n = 4 * k, 5 * k
+        assert m.qualifies(f, n, n, t), k
+        old_wrong += not _old_float32_qualify(f, n, n, t)
+    assert old_wrong > 0  # the bug class is real on this family
+
+
+# ---------------------------------------------------------------------- #
+# size windows: monotonicity, lo <= hi, exactness
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("measure", MEASURES)
+def test_size_window_monotone_and_consistent(measure):
+    m = get_measure(measure)
+    for t in THRESHOLDS:
+        sizes = np.arange(1, 400, dtype=np.int64)
+        lo, hi = m.size_window_arrays(sizes, t)
+        # scalar and vectorized forms agree
+        for r in (1, 7, 64, 399):
+            slo, shi = m.size_window(r, t)
+            assert slo == lo[r - 1]
+            assert (shi is None and hi[r - 1] == SIZE_INF) or shi == hi[r - 1]
+        # a set always qualifies against itself: r in [lo, hi]
+        assert np.all(lo <= sizes) and np.all(sizes <= hi)
+        # monotone in r
+        assert np.all(np.diff(lo) >= 0) and np.all(np.diff(hi) >= 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(min_value=1, max_value=500))
+def test_window_exactness(r):
+    """Every qualifying pair falls inside the window, and both bounds are
+    tight: a partner of size lo (resp. hi) exists that qualifies, while no
+    partner of size lo-1 (resp. hi+1) can."""
+    for name in MEASURES:
+        m = get_measure(name)
+        for t in (0.5, 0.7, 0.9, 2 / 3):
+            lo, hi = m.size_window(r, t)
+            # witness at lo: S ⊂ R with |S| = lo -> f = lo (max possible)
+            assert lo >= 1
+            assert m.qualifies(min(lo, r), r, lo, t), (name, t, r, lo)
+            # shrinking the lower bound would drop that witness: even the
+            # best-case pair at size lo-1 (f = min(r, lo-1)) fails
+            if lo > 1:
+                assert not m.qualifies(min(lo - 1, r), r, lo - 1, t), (
+                    name, t, r, lo)
+            if hi is not None:
+                # witness at hi: R ⊂ S with |S| = hi -> f = r
+                assert m.qualifies(min(r, hi), r, hi, t), (name, t, r, hi)
+                # best-case pair just past hi fails
+                assert not m.qualifies(min(r, hi + 1), r, hi + 1, t), (
+                    name, t, r, hi)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6))
+def test_window_bounds_cover_all_qualifying_pairs(seed):
+    """Randomized size distributions: every brute-force qualifying pair's
+    S column lies inside the [lo, hi) column window of its R row."""
+    rng = np.random.default_rng(seed)
+    R = SetCollection.from_ragged(
+        [rng.choice(40, size=rng.integers(1, 10), replace=False)
+         for _ in range(12)], universe=40)
+    S = SetCollection.from_ragged(
+        [rng.choice(40, size=rng.integers(1, 10), replace=False)
+         for _ in range(16)], universe=40)
+    Ss = S.sort_by_size()
+    col_of = {int(sid): j for j, sid in enumerate(Ss.ids)}
+    for name in MEASURES:
+        for t in (0.5, 2 / 3, 0.9):
+            lo, hi = window_bounds(R.sizes(), Ss.sizes(), t, name)
+            assert np.all(lo <= hi)
+            for (ri, sj) in brute_force_join(R, S, t, name):
+                j = col_of[sj]
+                assert lo[ri] <= j < hi[ri], (name, t, ri, sj)
+
+
+@pytest.mark.parametrize("measure", MEASURES)
+def test_length_filter_bounds_matches_measure(measure):
+    m = get_measure(measure)
+    lo, hi = length_filter_bounds(24, 0.7, measure)
+    slo, shi = m.size_window(24, 0.7)
+    assert int(lo) == slo
+    assert int(hi) == (shi if shi is not None else SIZE_INF)
+
+
+# ---------------------------------------------------------------------- #
+# int32 overflow guard
+# ---------------------------------------------------------------------- #
+def test_validate_accepts_bench_scales():
+    for name in MEASURES:
+        for t in THRESHOLDS:
+            get_measure(name).validate(t, 3000)  # must not raise
+
+
+def test_validate_rejects_overflow():
+    # cosine squares both sides: an ugly threshold's big denominator
+    # overflows int32 at modest sizes and must be rejected loudly
+    with pytest.raises(ValueError):
+        get_measure("cosine").validate(0.7000001234, 10**6)
+
+
+def test_numpy_qualify_promotes_past_int64():
+    # identical pair, sim = 1.0 >= t — but with this threshold's huge
+    # denominator the cosine cross products wrap int64; numpy_qualify
+    # must promote to Python ints and still accept the pair
+    t = 0.7000001234
+    got = numpy_qualify(np.array([[4000]]), np.array([4000]),
+                        np.array([4000]), t, "cosine")
+    assert got.dtype == bool and bool(got[0, 0])
+    assert get_measure("cosine").qualifies(4000, 4000, 4000, t)
+
+
+def test_similarity_reference_values():
+    a = np.array([0, 1, 2, 3])
+    b = np.array([0, 1, 4, 5, 6, 7])
+    assert similarity(a, b, "jaccard") == pytest.approx(2 / 8)
+    assert similarity(a, b, "cosine") == pytest.approx(2 / np.sqrt(24))
+    assert similarity(a, b, "dice") == pytest.approx(4 / 10)
+    assert similarity(a, b, "overlap") == pytest.approx(2 / 4)
