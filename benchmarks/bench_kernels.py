@@ -11,6 +11,16 @@ dense path writes+ships the O(m·n) boolean mask, the sparse path ships
 per-tile counts + packed (r, s) pairs — bytes proportional to the result.
 Both are reported, alongside measured result density and the host↔device
 bytes each emission mode moves on this container.
+
+``--method lfvt`` (or ``all``) adds the §9 method axis: a
+bitmap-vs-onehot-vs-lfvt memory/time comparison on synthetic datasets
+including a large-universe case (W >= 2^16 words) where the flat-LFVT
+walk's S-side bytes scale with Σ|seq| (sparse entry table, never O(U))
+while the bitmap path's dense (mb, n, W) popcount intermediate is
+infeasible at the default block size.
+
+CLI: ``python -m benchmarks.bench_kernels [--measure ...] [--method
+bitmap onehot lfvt | all] [--smoke] [--out F.json]``.
 """
 from __future__ import annotations
 
@@ -20,15 +30,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.join import brute_force_join
 from repro.core.sets import SetCollection
 from repro.core.tile_join import (_compact_mask, _mask_total, _onehot_qualify,
-                                  _popcount_qualify, round_capacity, window_bounds)
+                                  _popcount_qualify, cf_rs_join_device,
+                                  popcount_row_block, round_capacity,
+                                  window_bounds)
 from repro.data.synth import make_join_dataset
 from repro.launch.analysis import HBM_BW, PEAK_FLOPS
 
 from .common import emit, timed
 
 T = 0.5
+
+# feasibility budget for the dense popcount intermediate on this container
+INTERMEDIATE_BUDGET = 1 << 30
 
 
 def _prep(R, S, measure="jaccard"):
@@ -157,8 +173,156 @@ def main(measures=("jaccard",)) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------- #
+# §9 method axis: bitmap vs one-hot vs flat-LFVT, memory + time
+# ---------------------------------------------------------------------- #
+def _zipf_collection(n: int, universe: int, mean_len: int,
+                     rng: np.random.Generator) -> SetCollection:
+    """Zipf(1.3) element popularity over an arbitrary universe: popular
+    elements appear in most sets (deep shared LFVT chains), the tail
+    exercises the sparse entry table."""
+    sizes = np.clip(rng.poisson(mean_len, n), 1, max(universe // 2, 1))
+    sets = [np.minimum(rng.zipf(1.3, size=int(s)).astype(np.int64) - 1,
+                       universe - 1).astype(np.int32)
+            for s in sizes]
+    return SetCollection.from_ragged(sets, universe=universe)
+
+
+def _perturbed_from(S: SetCollection, rng: np.random.Generator,
+                    mean_len: int, frac: float = 0.3) -> SetCollection:
+    """R side for the method axis: ``frac`` of the rows are near-copies
+    of an S set (one element dropped), the rest fresh draws — so the
+    join has real qualifying pairs at T instead of an empty result."""
+    sets = []
+    for i in range(len(S)):
+        base = S.sets[i]
+        if rng.random() < frac and len(base) > 1:
+            sets.append(np.delete(base, rng.integers(len(base))))
+        else:
+            size = int(np.clip(rng.poisson(mean_len), 1, S.universe // 2))
+            sets.append(np.minimum(
+                rng.zipf(1.3, size=size).astype(np.int64) - 1,
+                S.universe - 1).astype(np.int32))
+    return SetCollection.from_ragged(sets, universe=S.universe)
+
+
+def _popcount_intermediate_bytes(m: int, n: int, W: int, r_block: int) -> int:
+    """Dense (mb, n, W) uint32 the popcount path stages per R block (the
+    row-block inner intermediate of ``popcount_counts``, via the shared
+    ``popcount_row_block`` so the model can't drift from the kernel)."""
+    return popcount_row_block(min(m, r_block), n) * n * W * 4
+
+
+def method_axis_sweep(smoke: bool = False) -> dict:
+    """bitmap-vs-onehot-vs-lfvt memory/time axis (DESIGN.md §9).
+
+    Two synthetic workloads: a mid-sized universe where every method runs
+    (times + parity), and a large universe (W >= 2^16 words, i.e.
+    >= 2^21 elements) where the bitmap sheet is |S|·W-shaped while the
+    flat LFVT ships Σ|seq| tuples + O(U) entry rows. The bitmap path is
+    measured there only at the reduced r_block that fits the
+    intermediate budget — at the default block it is infeasible.
+    """
+    out = {}
+    cases = [
+        ("midW", 1 << 13, 64 if smoke else 320, 24),
+        ("largeW", 1 << 21, 48 if smoke else 192, 32),
+    ]
+    for name, universe, n_sets, mean_len in cases:
+        rng = np.random.default_rng(17)
+        S = _zipf_collection(n_sets, universe, mean_len, rng)
+        R = _perturbed_from(S, rng, mean_len)
+        W = max((universe + 31) // 32, 1)
+        m, n = len(R), len(S)
+        oracle = brute_force_join(R, S, T)
+        case: dict = {"universe": universe, "w_words": W, "m": m, "n": n,
+                      "result_pairs": len(oracle)}
+
+        # --- flat LFVT: always runs; S-side bytes ~ Σ|seq| + O(U) ----- #
+        lstats: dict = {}
+        cf_rs_join_device(R, S, T, method="lfvt", stats=lstats)  # compile
+        got, t_lfvt = timed(
+            lambda: cf_rs_join_device(R, S, T, method="lfvt", stats=lstats),
+            repeat=1 if name == "largeW" else 2)
+        assert got == oracle, f"lfvt parity failed on {name}"
+        flat = S.sort_by_size().flat_lfvt()
+        case["lfvt"] = {
+            "seconds": t_lfvt,
+            "s_rep_bytes": lstats["s_flat_bytes"],
+            "seq_tuple_bytes": lstats["s_flat_seq_bytes"],
+            "total_seq_tuples": len(flat.seq_row),
+            "entry_rows": len(flat.entry_elem),
+            "entry_table_bytes": int(flat.entry_elem.nbytes * 4),
+            "join_intermediate_bytes": min(m, 1024) * n * 4,  # counts tile
+        }
+        emit(f"method_axis/{name}/lfvt", t_lfvt,
+             f"s_rep_bytes={lstats['s_flat_bytes']}"
+             f";bitmap_equiv={lstats['s_bitmap_bytes_equiv']}"
+             f";pairs={len(got)}")
+
+        # --- bitmap popcount: feasibility-gated ----------------------- #
+        s_bitmap_bytes = n * W * 4
+        inter_default = _popcount_intermediate_bytes(m, n, W, 1024)
+        feasible_default = inter_default <= INTERMEDIATE_BUDGET
+        bm: dict = {"s_rep_bytes": s_bitmap_bytes,
+                    "intermediate_bytes_default": inter_default,
+                    "feasible_at_default_block": feasible_default}
+        # shrink r_block until the staged intermediate fits the budget
+        r_block = 1024
+        while (_popcount_intermediate_bytes(m, n, W, r_block)
+               > INTERMEDIATE_BUDGET and r_block > 1):
+            r_block //= 2
+        bm["r_block_used"] = r_block
+        if smoke and name == "largeW":
+            # CI smoke never times the large-universe popcount: even a
+            # budget-fitting block stages hundreds of MB of (mb, n, W)
+            # intermediates on the runner — report the analytics only
+            bm["seconds"] = None
+            emit(f"method_axis/{name}/popcount", 0.0,
+                 f"smoke_skip;inter_bytes_default={inter_default}"
+                 f";feasible_default={feasible_default}")
+        else:
+            cf_rs_join_device(R, S, T, method="popcount", r_block=r_block)
+            got_b, t_bm = timed(
+                lambda: cf_rs_join_device(R, S, T, method="popcount",
+                                          r_block=r_block),
+                repeat=1 if name == "largeW" else 2)
+            assert got_b == oracle, f"popcount parity failed on {name}"
+            bm["seconds"] = t_bm
+            bm["slowdown_vs_lfvt"] = t_bm / max(t_lfvt, 1e-9)
+            emit(f"method_axis/{name}/popcount", t_bm,
+                 f"s_rep_bytes={s_bitmap_bytes};r_block={r_block}"
+                 f";feasible_default={feasible_default}")
+        case["bitmap"] = bm
+
+        # --- one-hot MXU formulation: universe-scan gated ------------- #
+        oh_blocks = -(-universe // 512)
+        if name == "largeW":
+            case["onehot"] = {
+                "seconds": None,
+                "skipped": f"scan over {oh_blocks} universe blocks",
+                "s_rep_bytes": s_bitmap_bytes,
+            }
+        else:
+            cf_rs_join_device(R, S, T, method="onehot")
+            got_o, t_oh = timed(
+                lambda: cf_rs_join_device(R, S, T, method="onehot"),
+                repeat=2)
+            assert got_o == oracle, f"onehot parity failed on {name}"
+            case["onehot"] = {"seconds": t_oh,
+                              "s_rep_bytes": s_bitmap_bytes}
+            emit(f"method_axis/{name}/onehot", t_oh,
+                 f"s_rep_bytes={s_bitmap_bytes}")
+
+        case["lfvt_vs_bitmap_rep_ratio"] = (
+            lstats["s_flat_bytes"] / max(s_bitmap_bytes, 1))
+        out[f"method_axis/{name}"] = case
+    return out
+
+
 if __name__ == "__main__":
     import argparse
+    import json
 
     from repro.core.measures import measure_names
 
@@ -166,6 +330,24 @@ if __name__ == "__main__":
     ap.add_argument("--measure", nargs="+", default=["jaccard"],
                     choices=list(measure_names()) + ["all"],
                     help="similarity-measure axis (or 'all')")
+    ap.add_argument("--method", nargs="+", default=["bitmap", "onehot"],
+                    choices=["bitmap", "onehot", "lfvt", "all"],
+                    help="join-method axis; 'lfvt' adds the §9 "
+                         "bitmap-vs-onehot-vs-lfvt memory/time sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (skips the infeasible cells)")
+    ap.add_argument("--out", default=None,
+                    help="write results as JSON to this path")
     args = ap.parse_args()
     ms = measure_names() if "all" in args.measure else tuple(args.measure)
-    main(measures=ms)
+    methods = ({"bitmap", "onehot", "lfvt"} if "all" in args.method
+               else set(args.method))
+    res: dict = {}
+    if methods & {"bitmap", "onehot"}:
+        res.update(main(measures=ms))
+    if "lfvt" in methods:
+        res.update(method_axis_sweep(smoke=args.smoke))
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(res, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.out}")

@@ -396,6 +396,115 @@ def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
             acc["live"], acc["total"], staged_peak)
 
 
+# ---------------------------------------------------------------------- #
+# reduce phase — flat-LFVT loop path (method='lfvt', DESIGN.md §9)
+# ---------------------------------------------------------------------- #
+def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
+                    *, emit: str, pair_capacity: int | None, measure: str,
+                    stats: dict | None) -> set:
+    """Per-shard flat-LFVT reduce on the sequential loop path.
+
+    The map side routes rows exactly like the bitmap paths, but each
+    shard's S partition is compiled to a ``FlatLFVT`` on the host and
+    shipped as plain int32 ndarrays — reducers never rebuild pointer
+    trees, and nothing |S|·W-shaped is ever materialized (the per-shard
+    arrays are ragged, which is why this path is loop-only). Shards
+    stream double-buffered: shard k+1's walk is dispatched before shard
+    k's pair count syncs.
+
+    Raggedness also means the jitted walk specializes per shard shape
+    (mb, n, E, T, max|seq| all differ), so every shard pays a trace —
+    acceptable on this CPU-bench path; bucketed padding of the flat
+    arrays (ROADMAP "shard_map for ragged flat arrays") is the known
+    follow-up that would let shards share compiled shapes.
+    """
+    from repro.kernels import ops as kops
+    from .lfvt_flat import flat_join_mask
+
+    s_rows, r_rows, route_stats = route(R, S, part)
+    r_sizes = R.sizes()
+    r_pad_all, _ = R.padded()
+    pairs: set = set()
+    acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
+           "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0}
+
+    def dispatch(k: int) -> dict | None:
+        rs, ss = r_rows[k], s_rows[k]
+        if not len(rs) or not len(ss):
+            return None
+        sub = SetCollection([S.sets[int(j)] for j in ss], S.universe,
+                            S.ids[ss].astype(np.int32))
+        flat = sub.flat_lfvt()
+        r_pad, sz = r_pad_all[rs], r_sizes[rs]
+        lo, hi = window_bounds(sz, flat.s_sizes, t, measure)
+        # map-output bytes: the serialized flat arrays + the shard's R rows
+        acc["ship"] += flat.nbytes() + r_pad.nbytes + sz.nbytes
+        acc["dense"] += len(rs) * len(ss)
+        acc["shards"] += 1
+        ctx = {"rs": rs, "flat": flat}
+        if emit == "pairs":
+            ctx["pending"] = kops.lfvt_join_pairs_dispatch(
+                flat, jnp.asarray(r_pad), jnp.asarray(sz), jnp.asarray(lo),
+                jnp.asarray(hi), t, measure=measure)
+        else:
+            ctx["mask"] = flat_join_mask(flat, r_pad, sz, lo, hi, t, measure)
+        return ctx
+
+    def finalize(ctx: dict) -> None:
+        rs, flat = ctx["rs"], ctx["flat"]
+        if emit == "pairs":
+            kstats: dict = {}
+            pp, nk = kops.join_pairs_finalize(
+                ctx["pending"], capacity=pair_capacity, stats=kstats)
+            local = np.asarray(pp[:nk] if nk else pp[:0])
+            acc["reduce"] += 8 * nk + 4 + kstats.get("counts_bytes", 0)
+            acc["regrows"] += kstats.get("regrows", 0)
+            acc["result"] += nk
+            mask_cells = len(rs) * flat.n_sets
+            acc["peak_mask"] = max(acc["peak_mask"], mask_cells)
+            acc["peak_inter"] = max(
+                acc["peak_inter"], mask_cells + kstats.get("pair_bytes", 0))
+        else:
+            mask = np.asarray(ctx["mask"])
+            rr, cc = np.nonzero(mask)
+            local = (np.stack([rr, cc], axis=1) if len(rr)
+                     else np.zeros((0, 2), np.int64))
+            acc["reduce"] += mask.size
+            acc["peak_mask"] = max(acc["peak_mask"], mask.size)
+            acc["peak_inter"] = max(acc["peak_inter"], mask.size)
+        if len(local):
+            rid = R.ids[rs[local[:, 0]]]
+            sid = flat.s_ids[local[:, 1]]
+            pairs.update(zip(map(int, rid), map(int, sid)))
+
+    in_flight: dict | None = None
+    for k in range(part.n_shards):
+        ctx = dispatch(k)
+        if in_flight is not None:
+            finalize(in_flight)
+            in_flight = None
+        if ctx is not None:
+            in_flight = ctx
+    if in_flight is not None:
+        finalize(in_flight)
+
+    n_result = acc["result"] if emit == "pairs" else len(pairs)
+    if stats is not None:
+        stats.update(route_stats)
+        stats.update(
+            intervals=part.intervals, psi=part.psi, n_shards=part.n_shards,
+            emit=emit, measure=measure, result_pairs=n_result,
+            pair_bytes=n_result * 8, reduce_bytes=acc["reduce"],
+            dense_mask_bytes=acc["dense"],
+            reduce_intermediate_peak_bytes=acc["peak_inter"],
+            reduce_mask_peak_bytes=acc["peak_mask"],
+            regrows=acc["regrows"], pad="ragged", n_buckets=acc["shards"],
+            shard_block_bytes=acc["ship"],
+            shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
+            pad_waste_max=0.0, pad_waste_mean=0.0)
+    return pairs
+
+
 def _emit_shard_pairs(block: ShardBlock, lk: int, local: np.ndarray,
                       out: set) -> None:
     """Map one shard's packed (row, col) indices back to original ids."""
@@ -431,6 +540,12 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
+    method:   'popcount' | 'onehot' | 'kernel_bitmap' | 'kernel_onehot'
+              (shard-local tile joins over bitmap blocks) | 'lfvt' —
+              loop-path only: each shard's S partition is compiled to a
+              ``FlatLFVT`` and shipped as plain int32 arrays (DESIGN.md
+              §9); nothing |S|·W-shaped is materialized, so it serves
+              universes where the bitmap packing is infeasible.
     measure:  'jaccard' | 'cosine' | 'dice' | 'overlap' — qualify
               predicate, per-shard windows and map-phase R replication all
               specialize per measure (DESIGN.md §8)
@@ -470,6 +585,16 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         t, max(int(R.sizes().max(initial=0)), int(S.sizes().max(initial=0))))
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
         R, S, t, n_shards, measure=measure)
+    if method == "lfvt":
+        # per-shard flat arrays are ragged (node/seq counts differ), so
+        # the shard_map stacked layout cannot hold them — loop path only
+        if mesh is not None:
+            raise ValueError(
+                "method='lfvt' runs on the loop path only (mesh=None); "
+                "per-shard FlatLFVT arrays are ragged")
+        return _lfvt_loop_join(R, S, t, part, emit=emit,
+                               pair_capacity=pair_capacity, measure=measure,
+                               stats=stats)
     pad_mode = pad if pad != "auto" else ("global" if mesh is not None
                                           else "bucket")
     if mesh is not None and pad_mode != "global":

@@ -1,0 +1,347 @@
+"""Flat-array Linear FVT: device-resident LFVT encoding + array-walk join.
+
+The pointer-based ``LFVT`` (core/fvt.py) is the paper-faithful host
+oracle: path-compressed nodes, Python objects, parent pointers. The
+paper's §3.2 headline, though, is that the compressed tree is stored in
+*linear arrays* for optimized traversal. This module is that layout:
+``encode`` compiles an ``LFVT`` (or, for parity testing, an ``FVT``)
+into CSR-style int32 arrays that serialize / upload as plain ndarrays,
+and the CF-RS-Join traversal becomes a vectorized array walk — no
+Python objects, no pointer chasing, and S-side device memory that
+scales with Σ|seq(a)| (total tuples; the entry table holds one row per
+*distinct present* element, never O(U)) instead of the |S|·⌈U/32⌉
+bitmap sheet the tile kernels need. That opens universes the
+bitmap/one-hot paths cannot touch (DESIGN.md §9).
+
+Array schema (node 0 is the root: empty sequence, parent -1):
+
+  node table   node_seq_off/len (N,)   slice of the node's tuples in the
+                                       concatenated sequence arrays
+               node_parent      (N,)   parent node id (-1 for the root)
+               child_indptr/ids        child CSR (structure/decode only;
+                                       the rootward walk never reads it)
+               owner_indptr/elems      owner CSR: element ids with L(a)
+                                       in this node, sorted, dup-free
+  sequences    seq_row          (T,)   T = Σ|tuples| = FVT node count;
+                                       rows into the size-sorted S —
+                                       (set id, size) = (s_ids[row],
+                                       s_sizes[row])
+  entry table  entry_elem       (E,)   sorted distinct element ids with
+                                       a non-empty seq (E <= Σ|seq|);
+                                       lookup is a binary search
+               entry_node/off   (E,)   L(a) address: node id + offset of
+                                       the 2-tuple inside the node
+               entry_len        (E,)   |seq(a)|
+  collection   s_ids, s_sizes   (n,)   size-sorted row -> external id/size
+
+Traversal (per R element, all lanes in lockstep under ``fori_loop``):
+
+  node, off, rem <- entry row (searchsorted)  # rem = |seq(a)| steps
+  repeat max(|seq|) times:
+    row <- seq_row[node_seq_off[node] + off]   # emit: f[row] += 1
+    stop the lane once row < lo (window early stop, Theorem 3.3 —
+      walk rows are strictly decreasing)
+    off -= 1; if off < 0: node <- parent, off <- node_seq_len-1
+
+then qualify ``f`` with ``measures.device_qualify`` + the per-row
+column window, exactly like every other device path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import measures
+from .fvt import FVT, LFVT
+from .sets import SetCollection
+
+__all__ = ["FlatLFVT", "FlatLFVTDevice", "encode", "flat_join_mask"]
+
+
+class FlatLFVTDevice(NamedTuple):
+    """Device-resident (jnp) subset of the arrays the walk reads."""
+
+    entry_elem: jax.Array
+    entry_node: jax.Array
+    entry_off: jax.Array
+    entry_len: jax.Array
+    node_seq_off: jax.Array
+    node_seq_len: jax.Array
+    node_parent: jax.Array
+    seq_row: jax.Array
+    s_sizes: jax.Array
+
+
+@dataclasses.dataclass(eq=False)
+class FlatLFVT:
+    """An LFVT compiled into linear int32 arrays (schema in module doc)."""
+
+    node_seq_off: np.ndarray   # (N,)
+    node_seq_len: np.ndarray   # (N,)
+    node_parent: np.ndarray    # (N,) -1 for the root
+    child_indptr: np.ndarray   # (N+1,)
+    child_ids: np.ndarray      # (N-1,) every non-root node is one child
+    owner_indptr: np.ndarray   # (N+1,)
+    owner_elems: np.ndarray    # (#distinct elements,)
+    seq_row: np.ndarray        # (T,) rows into the size-sorted S
+    entry_elem: np.ndarray     # (E,) sorted present element ids
+    entry_node: np.ndarray     # (E,)
+    entry_off: np.ndarray      # (E,)
+    entry_len: np.ndarray      # (E,)
+    s_ids: np.ndarray          # (n,)
+    s_sizes: np.ndarray        # (n,)
+    universe: int
+    max_seq_len: int           # static bound on walk length
+    _device: FlatLFVTDevice | None = dataclasses.field(
+        default=None, repr=False)
+
+    # -------------------------------------------------------------- #
+    @property
+    def n_nodes(self) -> int:
+        """Node count including the root (pointer LFVT's n_nodes + 1)."""
+        return len(self.node_seq_off)
+
+    @property
+    def n_sets(self) -> int:
+        return len(self.s_ids)
+
+    def arrays(self) -> tuple[np.ndarray, ...]:
+        """Every backing array, in field order — the serialized form."""
+        return tuple(
+            a for f in dataclasses.fields(self)
+            if isinstance(a := getattr(self, f.name), np.ndarray))
+
+    def nbytes(self) -> int:
+        """Total encoded bytes (what a shard ships / the device holds)."""
+        return int(sum(a.nbytes for a in self.arrays()))
+
+    # -------------------------------------------------------------- #
+    def entry_of(self, a: int):
+        """L(a) address ``(node id, offset, |seq(a)|)`` or None if the
+        element occurs in no set (binary search over ``entry_elem``)."""
+        i = int(np.searchsorted(self.entry_elem, a))
+        if i >= len(self.entry_elem) or int(self.entry_elem[i]) != a:
+            return None
+        return (int(self.entry_node[i]), int(self.entry_off[i]),
+                int(self.entry_len[i]))
+
+    def walk(self, a: int):
+        """Yield (set_id, size) from L(a) to the root — ``LFVT.walk``."""
+        entry = self.entry_of(a) if 0 <= a < self.universe else None
+        if entry is None:
+            return
+        node, off, _ = entry
+        while node > 0:
+            base = int(self.node_seq_off[node])
+            for k in range(off, -1, -1):
+                row = int(self.seq_row[base + k])
+                yield int(self.s_ids[row]), int(self.s_sizes[row])
+            node = int(self.node_parent[node])
+            off = int(self.node_seq_len[node]) - 1
+
+    def owners(self, nid: int) -> np.ndarray:
+        """Element ids whose L(a) lies in node ``nid`` (sorted)."""
+        return self.owner_elems[
+            int(self.owner_indptr[nid]): int(self.owner_indptr[nid + 1])]
+
+    def children(self, nid: int) -> np.ndarray:
+        return self.child_ids[
+            int(self.child_indptr[nid]): int(self.child_indptr[nid + 1])]
+
+    # -------------------------------------------------------------- #
+    def to_device(self) -> FlatLFVTDevice:
+        """Upload the walk arrays once; cached on the instance (the
+        S-rep cache in ``tile_join`` keeps the FlatLFVT itself alive)."""
+        if self._device is None:
+            self._device = FlatLFVTDevice(
+                jnp.asarray(self.entry_elem), jnp.asarray(self.entry_node),
+                jnp.asarray(self.entry_off), jnp.asarray(self.entry_len),
+                jnp.asarray(self.node_seq_off),
+                jnp.asarray(self.node_seq_len),
+                jnp.asarray(self.node_parent), jnp.asarray(self.seq_row),
+                jnp.asarray(self.s_sizes))
+        return self._device
+
+
+# ---------------------------------------------------------------------- #
+# encoder
+# ---------------------------------------------------------------------- #
+def _tree_adapters(tree):
+    """(tuples_of, children_of) unifying FVT and LFVT node shapes."""
+    if isinstance(tree, FVT):
+        return (lambda nd: [] if nd is tree.root else [(nd.set_id, nd.size)],
+                lambda nd: list(nd.children.values()))
+    return (lambda nd: nd.tuples, lambda nd: nd.children)
+
+
+def _tree_entries(tree):
+    """element id -> (node, offset-in-node, |seq(a)|), FVT or LFVT."""
+    out = {}
+    for a, e in tree.element_table.items():
+        if isinstance(tree, FVT):
+            seq_len, node = e
+            off = 0  # FVT nodes hold exactly one 2-tuple
+        else:
+            seq_len, node, off = e
+        out[a] = (node, off, seq_len)
+    return out
+
+
+def encode(S: SetCollection, tree: FVT | LFVT | None = None) -> FlatLFVT:
+    """Compile the LFVT of ``S`` into a :class:`FlatLFVT`.
+
+    ``tree`` defaults to ``LFVT(S)``; passing an ``FVT`` yields the
+    uncompressed flat encoding (one tuple per node) — walks are
+    identical either way, which the structural test suite pins down.
+    The encoding is threshold-independent: one FlatLFVT serves every
+    ``t`` and every measure.
+    """
+    Ss = S if S.sorted_by_size else S.sort_by_size()
+    tree = LFVT(S) if tree is None else tree
+    tuples_of, children_of = _tree_adapters(tree)
+    row_of = {int(sid): r for r, sid in enumerate(Ss.ids)}
+
+    # pre-order DFS: root gets id 0, children in insertion order
+    order = [tree.root]
+    stack = list(reversed(children_of(tree.root)))
+    while stack:
+        nd = stack.pop()
+        order.append(nd)
+        stack.extend(reversed(children_of(nd)))
+    ids = {id(nd): nid for nid, nd in enumerate(order)}
+    N = len(order)
+
+    seq_off = np.zeros(N, np.int32)
+    seq_len = np.zeros(N, np.int32)
+    parent = np.full(N, -1, np.int32)
+    child_lists: list[list[int]] = [[] for _ in range(N)]
+    rows: list[int] = []
+    for nid, nd in enumerate(order):
+        tups = tuples_of(nd)
+        seq_off[nid] = len(rows)
+        seq_len[nid] = len(tups)
+        rows.extend(row_of[int(sid)] for sid, _ in tups)
+        for c in children_of(nd):
+            cid = ids[id(c)]
+            parent[cid] = nid
+            child_lists[nid].append(cid)
+
+    child_counts = np.asarray([len(c) for c in child_lists], np.int64)
+    child_indptr = np.concatenate([[0], np.cumsum(child_counts)]).astype(
+        np.int32)
+    child_ids = (np.concatenate([np.asarray(c, np.int32)
+                                 for c in child_lists if c])
+                 if child_counts.sum() else np.zeros(0, np.int32))
+
+    entries = _tree_entries(tree)
+    entry_elem = np.sort(np.fromiter(entries, np.int32, len(entries)))
+    entry_node = np.zeros(len(entries), np.int32)
+    entry_off = np.zeros(len(entries), np.int32)
+    entry_len = np.zeros(len(entries), np.int32)
+    owner_lists: list[list[int]] = [[] for _ in range(N)]
+    for i, a in enumerate(map(int, entry_elem)):
+        nd, off, sl = entries[a]
+        nid = ids[id(nd)]
+        entry_node[i] = nid
+        entry_off[i] = off
+        entry_len[i] = sl
+        owner_lists[nid].append(a)
+    owner_counts = np.asarray([len(o) for o in owner_lists], np.int64)
+    owner_indptr = np.concatenate([[0], np.cumsum(owner_counts)]).astype(
+        np.int32)
+    owner_elems = (np.concatenate([np.sort(np.asarray(o, np.int32))
+                                   for o in owner_lists if o])
+                   if owner_counts.sum() else np.zeros(0, np.int32))
+
+    return FlatLFVT(
+        node_seq_off=seq_off, node_seq_len=seq_len, node_parent=parent,
+        child_indptr=child_indptr, child_ids=child_ids,
+        owner_indptr=owner_indptr, owner_elems=owner_elems,
+        seq_row=np.asarray(rows, np.int32),
+        entry_elem=entry_elem, entry_node=entry_node, entry_off=entry_off,
+        entry_len=entry_len,
+        s_ids=Ss.ids.astype(np.int32), s_sizes=Ss.sizes().astype(np.int32),
+        universe=int(S.universe), max_seq_len=int(entry_len.max(initial=0)))
+
+
+# ---------------------------------------------------------------------- #
+# device array-walk join
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _walk_counts(dev: FlatLFVTDevice, r_padded, col_lo, *, max_steps: int):
+    """(mb, Lr) padded R element lists -> (mb, n) int32 overlap counts.
+
+    Every (row, element) lane walks its L(a)->root path in lockstep;
+    exhausted or early-stopped lanes are parked at the root and add 0.
+    """
+    mb, Lr = r_padded.shape
+    n = dev.s_sizes.shape[0]
+    E = dev.entry_elem.shape[0]
+    a = r_padded
+    if E == 0:
+        return jnp.zeros((mb, n), jnp.int32)
+    # sparse entry lookup: binary search over the sorted present elements
+    idx = jnp.minimum(jnp.searchsorted(dev.entry_elem, a), E - 1)
+    present = (a >= 0) & (dev.entry_elem[idx] == a)
+    rem = jnp.where(present, dev.entry_len[idx], 0)
+    off = jnp.where(present, dev.entry_off[idx], 0)
+    node = jnp.where(present, dev.entry_node[idx], 0)
+    row_ix = jnp.broadcast_to(
+        jnp.arange(mb, dtype=jnp.int32)[:, None], (mb, Lr))
+    lo_b = col_lo.astype(jnp.int32)[:, None]
+    counts = jnp.zeros((mb, n), jnp.int32)
+
+    def body(_, state):
+        node, off, rem, counts = state
+        active = rem > 0
+        pos = dev.node_seq_off[node] + off
+        row = dev.seq_row[jnp.where(active, pos, 0)]
+        counts = counts.at[row_ix, jnp.where(active, row, 0)].add(
+            active.astype(jnp.int32))
+        # window early stop (Theorem 3.3): walk rows strictly decrease,
+        # so once row < lo every deeper-rootward set is oversized too
+        rem = jnp.where(active & (row >= lo_b), rem - 1, 0)
+        off = off - 1
+        up = off < 0
+        par = jnp.maximum(dev.node_parent[node], 0)
+        off = jnp.where(up, dev.node_seq_len[par] - 1, off)
+        node = jnp.where(up, par, node)
+        dead = rem <= 0  # park: keep gather indices in bounds
+        node = jnp.where(dead, 0, node)
+        off = jnp.where(dead, 0, jnp.maximum(off, 0))
+        return node, off, rem, counts
+
+    if max_steps > 0:
+        node, off, rem, counts = jax.lax.fori_loop(
+            0, max_steps, body, (node, off, rem, counts))
+    return counts
+
+
+@functools.partial(jax.jit, static_argnames=("max_steps", "t", "measure"))
+def _flat_qualify(dev: FlatLFVTDevice, r_padded, r_sizes, lo, hi, *,
+                  max_steps: int, t: float, measure: str):
+    counts = _walk_counts(dev, r_padded, lo, max_steps=max_steps)
+    cols = jnp.arange(dev.s_sizes.shape[0], dtype=jnp.int32)[None, :]
+    in_window = (cols >= lo[:, None]) & (cols < hi[:, None])
+    return measures.device_qualify(
+        counts, r_sizes[:, None], dev.s_sizes[None, :], t, measure) & in_window
+
+
+def flat_join_mask(flat: FlatLFVT, r_padded, r_sizes, lo, hi, t: float,
+                   measure: str = "jaccard") -> jax.Array:
+    """(mb, n) bool qualifying mask of an R block against the flat LFVT.
+
+    ``r_padded`` is the (mb, Lr) -1-padded element-list layout
+    (``SetCollection.padded``); columns are rows of the size-sorted S the
+    tree was encoded over, with the usual [lo, hi) windows applied.
+    """
+    dev = flat.to_device()
+    return _flat_qualify(
+        dev, jnp.asarray(r_padded), jnp.asarray(r_sizes, dtype=jnp.int32),
+        jnp.asarray(lo, dtype=jnp.int32), jnp.asarray(hi, dtype=jnp.int32),
+        max_steps=flat.max_seq_len, t=t, measure=measure)

@@ -23,6 +23,23 @@ import numpy as np
 __all__ = ["SetCollection", "length_filter_bounds", "jaccard", "similarity"]
 
 
+def _write_protect(out) -> None:
+    """Write-protect every ndarray leaf of a memoized representation.
+
+    Derived reps are plain arrays, tuples of arrays, or dataclasses of
+    arrays (``FlatLFVT``); all share one protection scheme so a cached
+    rep can never be mutated behind the memo's back.
+    """
+    if isinstance(out, np.ndarray):
+        out.setflags(write=False)
+    elif isinstance(out, tuple):
+        for a in out:
+            _write_protect(a)
+    elif dataclasses.is_dataclass(out):
+        for f in dataclasses.fields(out):
+            _write_protect(getattr(out, f.name))
+
+
 def _as_ragged(sets: Sequence[np.ndarray]) -> list[np.ndarray]:
     out = []
     for s in sets:
@@ -63,8 +80,7 @@ class SetCollection:
         out = self._reps.get(key)
         if out is None:
             out = build()
-            for a in out if isinstance(out, tuple) else (out,):
-                a.setflags(write=False)
+            _write_protect(out)
             self._reps[key] = out
         return out
 
@@ -154,6 +170,20 @@ class SetCollection:
             return out
 
         return self._memo(("bitmaps", W), build)
+
+    def flat_lfvt(self):
+        """Flat-array LFVT encoding of this collection (``FlatLFVT``).
+
+        Memoized under one keyed slot like the bitmap/padded/csr reps —
+        the encoding is threshold- and measure-independent, so repeated
+        joins at different ``t`` never rebuild the tree. The backing
+        arrays come back write-protected like every other cached rep.
+        """
+        def build():
+            from .lfvt_flat import encode  # deferred: sets is a leaf module
+            return encode(self)
+
+        return self._memo(("lfvt_flat",), build)
 
     def total_elements(self) -> int:
         return int(self.sizes().sum())

@@ -33,6 +33,7 @@ from .sets import SetCollection
 
 __all__ = [
     "popcount_counts",
+    "popcount_row_block",
     "onehot_counts",
     "qualify",
     "window_bounds",
@@ -47,6 +48,13 @@ __all__ = [
 # ---------------------------------------------------------------------- #
 # device-side primitives (pure jnp; kernels mirror these)
 # ---------------------------------------------------------------------- #
+def popcount_row_block(m: int, n: int) -> int:
+    """R-row block size bounding ``popcount_counts``' (mb, n, W) staged
+    intermediate. Shared with the benchmarks' feasibility gate so the
+    modeled intermediate always matches what the kernel stages."""
+    return max(1, min(m, 4096 // max(1, n // 1024 + 1)))
+
+
 def popcount_counts(r_bitmaps: jax.Array, s_bitmaps: jax.Array) -> jax.Array:
     """(m, W) x (n, W) uint32 -> (m, n) int32 intersection sizes.
 
@@ -57,7 +65,7 @@ def popcount_counts(r_bitmaps: jax.Array, s_bitmaps: jax.Array) -> jax.Array:
         return jnp.sum(jax.lax.population_count(inter), axis=-1, dtype=jnp.int32)
 
     m = r_bitmaps.shape[0]
-    mb = max(1, min(m, 4096 // max(1, s_bitmaps.shape[0] // 1024 + 1)))
+    mb = popcount_row_block(m, s_bitmaps.shape[0])
     if m <= mb:
         return row_block(r_bitmaps)
     pad = (-m) % mb
@@ -205,12 +213,19 @@ def clear_s_rep_cache() -> None:
 
 def _s_device_rep(S: SetCollection, family: str, W: int,
                   stats: dict | None = None):
-    """-> (sorted collection, device rep, device sizes, np sizes)."""
+    """-> (sorted collection, device rep, device sizes, np sizes).
+
+    family 'bitmap' -> (n, W) uint32 device bitmaps; 'padded' -> (n, L)
+    int32 element lists; 'lfvt' -> the ``FlatLFVT`` itself (its device
+    arrays are uploaded once via ``to_device`` and live on the instance,
+    which this cache keeps alive beside the other reps).
+    """
     entry = _S_REP_CACHE.get(S)
     if entry is None:
         entry = {}
         _S_REP_CACHE[S] = entry
-    key = ("bitmap", W) if family == "bitmap" else ("padded",)
+    key = (("bitmap", W) if family == "bitmap" else
+           ("lfvt",) if family == "lfvt" else ("padded",))
     hit = "sorted" in entry and key in entry
     if "sorted" not in entry:
         # None = "the key itself is already sorted": the cache value must
@@ -224,6 +239,10 @@ def _s_device_rep(S: SetCollection, family: str, W: int,
     if key not in entry:
         if family == "bitmap":
             entry[key] = jnp.asarray(Ss.bitmaps(W))
+        elif family == "lfvt":
+            flat = Ss.flat_lfvt()  # memoized on the collection
+            flat.to_device()       # one upload, cached on the FlatLFVT
+            entry[key] = flat
         else:
             entry[key] = jnp.asarray(Ss.padded()[0])
     if stats is not None:
@@ -261,9 +280,10 @@ def _r_block_rep(R: SetCollection, family: str, W: int, start: int,
         entry = {}
         _R_BLOCK_CACHE[R] = entry
     # the padded-list rep does not depend on W: one key (and one upload)
-    # serves corpora of every universe width
+    # serves corpora of every universe width AND both consumers of the
+    # layout (the one-hot matmul and the flat-LFVT array walk)
     key = (family, W, start, stop) if family == "bitmap" else (
-        family, start, stop)
+        "padded", start, stop)
     hit = key in entry
     if hit:
         entry[key] = entry.pop(key)  # LRU: move to the fresh end
@@ -284,7 +304,11 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
-            | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU).
+            | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU)
+            | 'lfvt' (flat-array LFVT walk, DESIGN.md §9 — S-side device
+            memory ~ Σ|seq| tuples plus E ≤ Σ|seq| sparse entry rows,
+            never O(U), instead of the |S|·⌈U/32⌉ bitmap sheet; the
+            path for large element universes).
     measure: 'jaccard' | 'cosine' | 'dice' | 'overlap' (DESIGN.md §8) —
             the qualify predicate and Lemma-3.1 window both specialize.
     emit:   'pairs' (default) — qualifying pairs are compacted on device
@@ -309,7 +333,8 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                          double_buffered=double_buffer, regrows=0,
                          r_rep_cache_hits=0)
         return set()
-    family = "onehot" if method == "onehot" else "bitmap"
+    family = ("lfvt" if method == "lfvt" else
+              "onehot" if method == "onehot" else "bitmap")
     universe = max(R.universe, S.universe)
     W = max((universe + 31) // 32, 1)
     Ss, s_rep, s_sz, s_sizes = _s_device_rep(S, family, W, stats)
@@ -319,9 +344,9 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         t, max(int(r_sizes_all.max(initial=0)), int(s_sizes.max(initial=0))))
     lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t, measure)
 
-    kernel_pairs = method in ("kernel_bitmap", "kernel_onehot") and (
+    kernel_pairs = method in ("kernel_bitmap", "kernel_onehot", "lfvt") and (
         emit == "pairs")
-    if method in ("kernel_bitmap", "kernel_onehot"):
+    if method in ("kernel_bitmap", "kernel_onehot", "lfvt"):
         from repro.kernels import ops as kops  # deferred: optional dep
 
     pairs: set = set()
@@ -349,12 +374,18 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             if method == "kernel_bitmap":
                 blk["pending"] = kops.bitmap_join_pairs_dispatch(
                     r_rep, r_sz, s_rep, s_sz, lo, hi, t, measure=measure)
-            else:
+            elif method == "kernel_onehot":
                 blk["pending"] = kops.onehot_join_pairs_dispatch(
                     r_rep, r_sz, s_rep, s_sz, lo, hi, t, universe=universe,
                     measure=measure)
+            else:  # lfvt: whole-block mask as one live tile
+                blk["pending"] = kops.lfvt_join_pairs_dispatch(
+                    s_rep, r_rep, r_sz, lo, hi, t, measure=measure)
             return blk
-        if method == "popcount":
+        if method == "lfvt":
+            from .lfvt_flat import flat_join_mask
+            mask = flat_join_mask(s_rep, r_rep, r_sz, lo, hi, t, measure)
+        elif method == "popcount":
             mask = _popcount_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t,
                                      measure=measure)
         elif method == "onehot":
@@ -441,6 +472,12 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         if kernel_pairs:
             stats["live_tiles"] = acc["live"]
             stats["total_tiles"] = acc["total_tiles"]
+        if method == "lfvt":
+            # the §9 memory axis: what the flat S rep holds on device vs
+            # what the bitmap sheet would have cost at this universe
+            stats["s_flat_bytes"] = s_rep.nbytes()
+            stats["s_flat_seq_bytes"] = int(s_rep.seq_row.nbytes)
+            stats["s_bitmap_bytes_equiv"] = len(Ss) * W * 4
     return pairs
 
 

@@ -36,7 +36,8 @@ from . import onehot_join as _oj
 __all__ = ["bitmap_join", "onehot_join", "bitmap_join_pairs",
            "onehot_join_pairs", "join_pairs", "pick_tiles", "round_capacity",
            "PAIR_CAP_GRAIN", "PendingPairs", "bitmap_join_pairs_dispatch",
-           "onehot_join_pairs_dispatch", "join_pairs_finalize"]
+           "onehot_join_pairs_dispatch", "lfvt_join_pairs",
+           "lfvt_join_pairs_dispatch", "join_pairs_finalize"]
 
 
 def _interpret_default():
@@ -331,12 +332,44 @@ def onehot_join_pairs_dispatch(r_bitmaps_or_padded, r_sizes, s_bitmaps,
                                 t, tiles, interpret, measure)
 
 
+def lfvt_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
+                             measure: str = "jaccard") -> PendingPairs:
+    """Flat-LFVT array-walk join as an in-flight sparse emission.
+
+    ``flat`` is a ``core.lfvt_flat.FlatLFVT`` (device arrays cached on
+    the instance); ``r_padded`` the (mb, Lr) -1-padded R element lists.
+    The whole (mb, n) qualifying mask is one "live tile", so the PR-1
+    ``PendingPairs`` protocol — deferred count sync, ``_compact_live``
+    packing, power-of-two regrow — applies unchanged.
+    """
+    from repro.core.lfvt_flat import flat_join_mask  # deferred: no cycle
+    mb, n = r_padded.shape[0], flat.n_sets
+    if mb == 0 or n == 0:
+        return PendingPairs(None, None, None, None, max(mb, 1), max(n, 1),
+                            0, 1, mb * n)
+    mask = flat_join_mask(flat, r_padded, r_sizes, lo, hi, t, measure)
+    counts = jnp.sum(mask, dtype=jnp.int32).reshape(1, 1)
+    zero = jnp.zeros(1, jnp.int32)
+    return PendingPairs(mask[None], counts, zero, zero, mb, n, 1, 1, mb * n)
+
+
+def lfvt_join_pairs(flat, r_padded, r_sizes, lo, hi, t: float,
+                    capacity: int | None = None, stats: dict | None = None,
+                    measure: str = "jaccard"):
+    """Sparse flat-LFVT join; same contract as ``bitmap_join_pairs``."""
+    pending = lfvt_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t,
+                                       measure)
+    return join_pairs_finalize(pending, capacity, stats)
+
+
 def join_pairs(method: str, *args, **kw):
-    """Dispatch sparse emission by kernel family ('bitmap' | 'onehot')."""
+    """Dispatch sparse emission by family ('bitmap' | 'onehot' | 'lfvt')."""
     if method == "bitmap":
         return bitmap_join_pairs(*args, **kw)
     if method == "onehot":
         return onehot_join_pairs(*args, **kw)
+    if method == "lfvt":
+        return lfvt_join_pairs(*args, **kw)
     raise ValueError(f"unknown pair-emission method {method!r}")
 
 

@@ -4,9 +4,11 @@ Randomized collections — duplicate elements, empty sets, skewed sizes —
 joined by the float64 brute-force oracle vs every execution path:
 
   host   : FVT, LFVT (Algorithm 1 traversals)
-  device : popcount / one-hot pure-jnp oracles, emit='pairs' and 'mask'
+  device : popcount / one-hot pure-jnp oracles, emit='pairs' and 'mask',
+           and the flat-array LFVT walk (method='lfvt', DESIGN.md §9)
   kernel : Pallas bitmap/onehot, dense tiled and live-tiled sparse emission
-  MR     : ``mr_cf_rs_join`` loop path (shard-sparse reduce)
+  MR     : ``mr_cf_rs_join`` loop path (shard-sparse reduce + the
+           per-shard flat-LFVT reduce)
 
 asserting bit-identical pair sets across all four measures and thresholds
 including the adversarial boundary value 2/3 (whose float32 evaluation
@@ -110,6 +112,36 @@ def test_device_paths_differential(measure):
 
 
 # ---------------------------------------------------------------------- #
+# flat-array LFVT walk (method='lfvt'): full measure x threshold grid,
+# skewed/duplicate/empty inputs, sparse + dense emission (ISSUE 4)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("measure", MEASURES)
+def test_lfvt_flat_differential(measure):
+    for t in THRESHOLDS:
+        for seed, skew in ((201, False), (202, True)):
+            R, S = random_collections(seed, max_size=10, skew=skew,
+                                      full_row=True)
+            oracle = brute_force_join(R, S, t, measure)
+            got = cf_rs_join_device(R, S, t, method="lfvt", measure=measure)
+            assert got == oracle, ("lfvt/pairs", measure, t, seed)
+            got_m = cf_rs_join_device(R, S, t, method="lfvt", emit="mask",
+                                      measure=measure)
+            assert got_m == oracle, ("lfvt/mask", measure, t, seed)
+
+
+def test_lfvt_flat_matches_host_lfvt_bitwise():
+    # bit-identical to the pointer-tree host oracle, not just the brute
+    # force: same pair set on every (measure, t) cell
+    R, S = random_collections(203, max_size=12, skew=True, full_row=True)
+    for measure in MEASURES:
+        for t in THRESHOLDS:
+            assert (cf_rs_join_device(R, S, t, method="lfvt",
+                                      measure=measure)
+                    == cf_rs_join_lfvt(R, S, t, measure=measure)
+                    == cf_rs_join_fvt(R, S, t, measure=measure))
+
+
+# ---------------------------------------------------------------------- #
 # Pallas kernel paths (interpret on CPU): live-tiled sparse + dense tiled
 # ---------------------------------------------------------------------- #
 @pytest.mark.parametrize("measure", MEASURES)
@@ -154,6 +186,9 @@ def test_mr_loop_differential(measure):
             assert stats["measure"] == measure
             got_m = mr_cf_rs_join(R, S, t, 3, emit="mask", measure=measure)
             assert got_m == oracle, ("mr/mask", measure, t, seed)
+            # per-shard flat-LFVT reduce (shards ship encoded arrays)
+            got_l = mr_cf_rs_join(R, S, t, 3, method="lfvt", measure=measure)
+            assert got_l == oracle, ("mr/lfvt", measure, t, seed)
     # hash-routing ablation must agree too (full S everywhere)
     R, S = random_collections(9, max_size=10)
     t = 0.7
@@ -188,7 +223,11 @@ def test_boundary_pair_on_every_path(measure):
     assert cf_rs_join_device(R, S, BOUNDARY_T, measure=measure) == expect
     assert cf_rs_join_device(R, S, BOUNDARY_T, method="kernel_bitmap",
                              measure=measure) == expect
+    assert cf_rs_join_device(R, S, BOUNDARY_T, method="lfvt",
+                             measure=measure) == expect
     assert mr_cf_rs_join(R, S, BOUNDARY_T, 2, measure=measure) == expect
+    assert mr_cf_rs_join(R, S, BOUNDARY_T, 2, method="lfvt",
+                         measure=measure) == expect
 
 
 # ---------------------------------------------------------------------- #
@@ -205,6 +244,12 @@ def test_empty_sides_all_measures():
         assert cf_rs_join_fvt(R, S_empty, 0.5, measure=measure) == set()
         assert cf_rs_join_device(none, R, 0.5, measure=measure) == set()
         assert mr_cf_rs_join(R, S_empty, 0.5, 2, measure=measure) == set()
+        assert cf_rs_join_device(R, S_empty, 0.5, method="lfvt",
+                                 measure=measure) == set()
+        assert cf_rs_join_device(none, R, 0.5, method="lfvt",
+                                 measure=measure) == set()
+        assert mr_cf_rs_join(R, S_empty, 0.5, 2, method="lfvt",
+                             measure=measure) == set()
 
 
 # ---------------------------------------------------------------------- #
@@ -238,4 +283,6 @@ def test_device_paths_wide_slow(seed, max_size, skew):
         for t in THRESHOLDS:
             oracle = brute_force_join(R, S, t, measure)
             assert cf_rs_join_device(R, S, t, measure=measure) == oracle
+            assert cf_rs_join_device(R, S, t, method="lfvt",
+                                     measure=measure) == oracle
             assert mr_cf_rs_join(R, S, t, 3, measure=measure) == oracle

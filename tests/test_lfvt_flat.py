@@ -1,0 +1,327 @@
+"""Flat-array LFVT structural-invariant + encoder-fuzz suites (ISSUE 4).
+
+Locks down ``core/lfvt_flat.py``:
+
+  * encode/decode round-trip: ``FlatLFVT.walk(a)`` reproduces
+    ``LFVT.walk(a)`` (== reversed ``seq(a)``) for every element,
+    hypothesis-randomized over duplicate/empty/Zipf-skewed collections;
+  * array-schema invariants: Σ node seq lengths == FVT node count, owner
+    CSR rows sorted + duplicate-free, child/parent consistency, walk
+    rows strictly decreasing;
+  * FVT-vs-LFVT encoding parity: both trees flatten to identical walks;
+  * encoder edge cases: empty collections, single-element sets, maximal
+    path compression, unused element ids;
+  * the pinned ``_split`` owner-repair regression (owners land in the
+    correct post-split node after encoding);
+  * cache plumbing: ``SetCollection.flat_lfvt`` memoization +
+    write-protection, ``to_device`` single upload, the tile_join S-rep
+    cache, and the mesh rejection of the MR path.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
+
+from repro.core.fvt import FVT, LFVT, build_seqs
+from repro.core.join import brute_force_join
+from repro.core.lfvt_flat import FlatLFVT, encode, flat_join_mask
+from repro.core.sets import SetCollection
+from repro.core.tile_join import cf_rs_join_device, window_bounds
+
+
+# ---------------------------------------------------------------------- #
+# generators
+# ---------------------------------------------------------------------- #
+def random_collection(seed, n=20, universe=48, max_size=12, skew=False,
+                      empty_frac=0.15) -> SetCollection:
+    """Ragged sets with raw duplicate elements, empties, optional Zipf."""
+    rng = np.random.default_rng(seed)
+    sets = []
+    for _ in range(n):
+        if rng.random() < empty_frac:
+            sets.append(np.zeros(0, np.int32))
+            continue
+        size = (int(min(max_size, rng.zipf(1.6))) if skew
+                else int(rng.integers(1, max_size + 1)))
+        sets.append(rng.integers(0, universe, size=size))
+    return SetCollection.from_ragged(sets, universe=universe)
+
+
+def all_walks(flat_or_tree, universe):
+    return {a: list(flat_or_tree.walk(a)) for a in range(universe)}
+
+
+# ---------------------------------------------------------------------- #
+# round-trip: flat walks == pointer-tree walks == reversed seq(a)
+# ---------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       max_size=st.sampled_from([3, 8, 16]),
+       skew=st.sampled_from([False, True]))
+def test_walk_roundtrip_matches_lfvt(seed, max_size, skew):
+    S = random_collection(seed, max_size=max_size, skew=skew)
+    tree = LFVT(S)
+    flat = encode(S, tree=tree)
+    seqs = build_seqs(S)
+    for a in range(S.universe):
+        expect = list(reversed(seqs.get(a, [])))
+        assert list(flat.walk(a)) == list(tree.walk(a)) == expect, (seed, a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       skew=st.sampled_from([False, True]))
+def test_from_fvt_vs_from_lfvt_identical_walks(seed, skew):
+    S = random_collection(seed, skew=skew)
+    from_lfvt = encode(S)                 # default: path-compressed
+    from_fvt = encode(S, tree=FVT(S))     # uncompressed, 1 tuple per node
+    assert all_walks(from_lfvt, S.universe) == all_walks(from_fvt, S.universe)
+    # same tuple multiset even though the node decomposition differs
+    assert len(from_lfvt.seq_row) == len(from_fvt.seq_row)
+    assert from_lfvt.n_nodes <= from_fvt.n_nodes
+
+
+# ---------------------------------------------------------------------- #
+# array-schema structural invariants
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed,skew", [(0, False), (1, False), (2, True),
+                                       (7, True)])
+def test_structural_invariants(seed, skew):
+    S = random_collection(seed, skew=skew)
+    lfvt, fvt = LFVT(S), FVT(S)
+    flat = encode(S, tree=lfvt)
+    N = flat.n_nodes
+    # node 0 is the root: empty sequence, no parent; every other node has
+    # a non-empty sequence and a valid parent
+    assert N == lfvt.n_nodes + 1
+    assert flat.node_seq_len[0] == 0 and flat.node_parent[0] == -1
+    assert (flat.node_seq_len[1:] >= 1).all()
+    assert ((flat.node_parent[1:] >= 0) & (flat.node_parent[1:] < N)).all()
+    # Σ node seq lengths == total tuples == the pointer FVT's node count
+    assert int(flat.node_seq_len.sum()) == len(flat.seq_row) == fvt.n_nodes
+    # seq offsets tile the concatenated array exactly
+    assert (flat.node_seq_off ==
+            np.concatenate([[0], np.cumsum(flat.node_seq_len)[:-1]])).all()
+    # child CSR: every non-root node appears exactly once, under its parent
+    assert len(flat.child_ids) == N - 1
+    assert sorted(map(int, flat.child_ids)) == list(range(1, N))
+    for nid in range(N):
+        for c in flat.children(nid):
+            assert int(flat.node_parent[c]) == nid
+    # entry table: sorted, duplicate-free keys; each row addresses a real
+    # 2-tuple of a real node
+    assert (np.diff(flat.entry_elem) > 0).all()
+    for i, a in enumerate(map(int, flat.entry_elem)):
+        nid, off, sl = flat.entry_of(a)
+        assert (nid, off, sl) == (int(flat.entry_node[i]),
+                                  int(flat.entry_off[i]),
+                                  int(flat.entry_len[i]))
+        assert 0 <= off < int(flat.node_seq_len[nid])
+        assert sl == len(list(flat.walk(a))) >= 1
+    # walk rows strictly decrease (size-sorted S, rootward = bigger sets)
+    for a in map(int, flat.entry_elem):
+        rows = [int(np.nonzero(flat.s_ids == sid)[0][0])
+                for sid, _ in flat.walk(a)]
+        assert all(r1 > r2 for r1, r2 in zip(rows, rows[1:]))
+    assert flat.max_seq_len == int(flat.entry_len.max(initial=0))
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_owner_csr_sorted_and_duplicate_free(seed):
+    S = random_collection(seed, skew=(seed == 11))
+    tree = LFVT(S)
+    flat = encode(S, tree=tree)
+    seen = []
+    for nid in range(flat.n_nodes):
+        owners = flat.owners(nid)
+        # sorted + duplicate-free within each node
+        assert (np.diff(owners) > 0).all()
+        # owner's entry points back at this node
+        for a in map(int, owners):
+            assert flat.entry_of(a)[0] == nid
+        seen.extend(map(int, owners))
+    # owners partition exactly the present elements
+    assert sorted(seen) == list(map(int, flat.entry_elem))
+    assert len(seen) == len(set(seen)) == len(tree.element_table)
+    assert int(flat.owner_indptr[-1]) == len(flat.owner_elems) == len(seen)
+
+
+# ---------------------------------------------------------------------- #
+# encoder fuzz / edge cases
+# ---------------------------------------------------------------------- #
+def test_empty_collection():
+    for S in (SetCollection.from_ragged([], universe=8),
+              SetCollection.from_ragged([]),  # universe 0
+              SetCollection.from_ragged(
+                  [np.zeros(0, np.int32)] * 3, universe=5)):
+        flat = encode(S)
+        assert flat.n_nodes == 1  # just the root
+        assert len(flat.seq_row) == 0 and len(flat.owner_elems) == 0
+        assert flat.max_seq_len == 0
+        assert len(flat.entry_elem) == 0
+        assert all(list(flat.walk(a)) == [] for a in range(flat.universe))
+
+
+def test_single_element_sets():
+    S = SetCollection.from_ragged(
+        [np.array([2]), np.array([5]), np.array([2])], universe=8)
+    flat = encode(S)
+    # element 2 lives in two singleton sets -> one 2-deep chain; element 5
+    # in one -> its own root child
+    assert list(flat.walk(2)) == [(2, 1), (0, 1)]  # ids tie-break ascending
+    assert list(flat.walk(5)) == [(1, 1)]
+    assert list(flat.walk(0)) == []
+    assert flat.entry_of(2)[2] == 2 and flat.entry_of(5)[2] == 1
+    assert flat.entry_of(0) is None
+
+
+def test_all_identical_sets_maximal_compression():
+    k = 6
+    S = SetCollection.from_ragged([np.array([1, 4, 7])] * k, universe=9)
+    flat = encode(S)
+    # every seq(a) is the same k-tuple chain: one compressed node + root
+    assert flat.n_nodes == 2
+    assert int(flat.node_seq_len[1]) == k == len(flat.seq_row)
+    assert list(flat.owners(1)) == [1, 4, 7]
+    for a in (1, 4, 7):
+        # walk = reversed seq(a): ids descend from L(a) to the root
+        assert list(flat.walk(a)) == list(
+            reversed([(i, 3) for i in range(k)]))
+
+
+def test_unused_element_ids():
+    S = SetCollection.from_ragged([np.array([0, 3])], universe=100)
+    flat = encode(S)
+    assert flat.universe == 100
+    # entry table holds only the two present elements, never O(U) rows
+    assert list(flat.entry_elem) == [0, 3]
+    for a in range(100):
+        if a in (0, 3):
+            assert flat.entry_of(a) is not None
+        else:
+            assert flat.entry_of(a) is None
+            assert list(flat.walk(a)) == []
+    assert list(flat.walk(-1)) == [] and list(flat.walk(10**6)) == []
+
+
+def test_split_owner_repair_survives_encoding():
+    """Pinned regression: the ``LFVT._split`` owner repair (entries whose
+    L(a) moves into the tail node) must be reflected in the encoded owner
+    CSR and entry table — owners land in the correct post-split node."""
+    # engineered so insertion order 10,11,12,13,... forces a split of the
+    # chain [(0,5),(1,4),(2,3)] at offset 2 (cf. tests/test_lfvt_nodes.py)
+    S = SetCollection.from_ragged([
+        np.array([10, 11, 12, 13, 20]),   # id0, size 5
+        np.array([10, 11, 12, 13]),       # id1, size 4
+        np.array([10, 12, 21]),           # id2, size 3
+        np.array([12, 22]),               # id3, size 2
+        np.array([13, 23, 24]),           # id4, size 3
+    ], universe=25)
+    tree = LFVT(S)
+    flat = encode(S, tree=tree)
+    # sorted rows: (size desc, id asc) -> id0, id1, id2, id4, id3
+    assert list(flat.s_ids) == [0, 1, 2, 4, 3]
+    head, off11, _ = flat.entry_of(11)
+    tail, off10, _ = flat.entry_of(10)
+    assert head != tail
+    # head kept [(0,5),(1,4)]; 11 (offset 1) and 20 (offset 0) stayed
+    assert int(flat.node_seq_len[head]) == 2
+    assert list(flat.seq_row[flat.node_seq_off[head]:
+                             flat.node_seq_off[head] + 2]) == [0, 1]
+    assert off11 == 1 and flat.entry_of(20)[1] == 0
+    assert list(flat.owners(head)) == [11, 20]
+    # the split moved 10's L(a) into the tail [(2,3)] at rebased offset 0
+    assert int(flat.node_parent[tail]) == head
+    assert int(flat.node_seq_len[tail]) == 1
+    assert int(flat.seq_row[flat.node_seq_off[tail]]) == 2  # row of id2
+    assert off10 == 0
+    assert list(flat.owners(tail)) == [10]
+    # deeper entries untouched: 12 under the tail, 13 under the head
+    n12, n13 = flat.entry_of(12)[0], flat.entry_of(13)[0]
+    assert int(flat.node_parent[n12]) == tail
+    assert int(flat.node_parent[n13]) == head
+    # and every walk still decodes to reversed seq(a)
+    seqs = build_seqs(S)
+    for a, seq in seqs.items():
+        assert list(flat.walk(a)) == list(reversed(seq))
+
+
+# ---------------------------------------------------------------------- #
+# memoization, write-protection, device upload
+# ---------------------------------------------------------------------- #
+def test_flat_lfvt_memoized_one_keyed_slot():
+    S = random_collection(5)
+    flat = S.flat_lfvt()
+    assert S.flat_lfvt() is flat          # same slot across calls
+    assert isinstance(flat, FlatLFVT)
+    # threshold-independent: nothing about the key involves t/measure,
+    # so repeated joins at different thresholds never re-encode
+    got = {k for k in S._reps if k == ("lfvt_flat",)}
+    assert got == {("lfvt_flat",)}
+    # write-protected like the bitmap/padded/csr reps
+    for a in flat.arrays():
+        assert not a.flags.writeable
+    with pytest.raises(ValueError):
+        flat.seq_row[:1] = 0
+
+
+def test_to_device_uploads_once():
+    S = random_collection(6)
+    flat = S.flat_lfvt()
+    dev = flat.to_device()
+    assert flat.to_device() is dev
+    np.testing.assert_array_equal(np.asarray(dev.seq_row), flat.seq_row)
+    np.testing.assert_array_equal(np.asarray(dev.s_sizes), flat.s_sizes)
+
+
+def test_s_rep_cache_holds_flat_rep():
+    from repro.core import tile_join
+    tile_join.clear_s_rep_cache()
+    R = random_collection(8, n=10)
+    S = random_collection(9, n=12)
+    stats: dict = {}
+    cf_rs_join_device(R, S, 0.5, method="lfvt", stats=stats)
+    assert stats["s_rep_cache_hit"] is False
+    cf_rs_join_device(R, S, 0.7, method="lfvt", stats=stats)
+    assert stats["s_rep_cache_hit"] is True  # no re-encode per threshold
+    assert stats["s_flat_bytes"] > 0
+    assert stats["s_bitmap_bytes_equiv"] > 0
+    tile_join.clear_s_rep_cache()
+
+
+# ---------------------------------------------------------------------- #
+# device mask parity + MR-path guard rails
+# ---------------------------------------------------------------------- #
+def test_flat_join_mask_matches_bruteforce():
+    R = random_collection(12, n=14, empty_frac=0.2)
+    S = random_collection(13, n=16, empty_frac=0.2)
+    t = 2 / 3
+    Ss = S.sort_by_size()
+    flat = Ss.flat_lfvt()
+    r_pad, r_sz = R.padded()
+    lo, hi = window_bounds(r_sz, flat.s_sizes, t)
+    mask = np.asarray(flat_join_mask(flat, r_pad, r_sz, lo, hi, t))
+    got = {(int(R.ids[i]), int(flat.s_ids[j]))
+           for i, j in zip(*np.nonzero(mask))}
+    assert got == brute_force_join(R, S, t)
+
+
+def test_mr_lfvt_requires_loop_path():
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.distributed import mr_cf_rs_join
+    R = random_collection(1, n=6)
+    S = random_collection(2, n=6)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="loop path"):
+        mr_cf_rs_join(R, S, 0.5, 1, method="lfvt", mesh=mesh)
+
+
+def test_unknown_method_still_raises():
+    R = random_collection(1, n=4)
+    S = random_collection(2, n=4)
+    with pytest.raises(ValueError, match="unknown method"):
+        cf_rs_join_device(R, S, 0.5, method="lfvt_flat")
