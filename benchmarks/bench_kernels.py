@@ -19,8 +19,18 @@ walk's S-side bytes scale with Σ|seq| (sparse entry table, never O(U))
 while the bitmap path's dense (mb, n, W) popcount intermediate is
 infeasible at the default block size.
 
+``--impl kernel|ref|all`` (with ``--method lfvt``) picks the walk
+execution layer: ``kernel`` is the ISSUE-5 live row-tiled walk
+(``method='lfvt'`` — Mosaic on TPU, its compiled jnp twin on CPU,
+DESIGN.md §10) with walk_steps/early_stops stats and the
+``kernel_vs_ref_walk_ratio`` the CI regression gate tracks; ``ref`` is
+the PR-4 whole-block jnp walk (``method='lfvt_ref'``).
+
 CLI: ``python -m benchmarks.bench_kernels [--measure ...] [--method
-bitmap onehot lfvt | all] [--smoke] [--out F.json]``.
+bitmap onehot lfvt | all] [--impl kernel ref | all] [--smoke]
+[--out F.json] [--append]`` — ``--out`` writes the consolidated
+``{config, method, impl, metrics}`` row artifact (BENCH_pr5.json);
+``--append`` extends an existing artifact (one file across benches).
 """
 from __future__ import annotations
 
@@ -39,7 +49,7 @@ from repro.core.tile_join import (_compact_mask, _mask_total, _onehot_qualify,
 from repro.data.synth import make_join_dataset
 from repro.launch.analysis import HBM_BW, PEAK_FLOPS
 
-from .common import emit, timed
+from .common import bench_row, emit, timed, write_bench_json
 
 T = 0.5
 
@@ -213,8 +223,9 @@ def _popcount_intermediate_bytes(m: int, n: int, W: int, r_block: int) -> int:
     return popcount_row_block(min(m, r_block), n) * n * W * 4
 
 
-def method_axis_sweep(smoke: bool = False) -> dict:
-    """bitmap-vs-onehot-vs-lfvt memory/time axis (DESIGN.md §9).
+def method_axis_sweep(smoke: bool = False,
+                      impls=("kernel", "ref")) -> list:
+    """bitmap-vs-onehot-vs-lfvt memory/time axis (DESIGN.md §9-§10).
 
     Two synthetic workloads: a mid-sized universe where every method runs
     (times + parity), and a large universe (W >= 2^16 words, i.e.
@@ -222,51 +233,102 @@ def method_axis_sweep(smoke: bool = False) -> dict:
     flat LFVT ships Σ|seq| tuples + O(U) entry rows. The bitmap path is
     measured there only at the reduced r_block that fits the
     intermediate budget — at the default block it is infeasible.
+
+    ``impls`` picks the lfvt walk execution layers to time ('kernel' —
+    the live row-tiled walk kernel — and/or 'ref' — the PR-4 whole-block
+    jnp walk); when both run, the kernel row records
+    ``kernel_vs_ref_walk_ratio`` (kernel seconds / ref seconds, < 1
+    means the kernel wins), the gate-tracked metric.
+
+    Returns consolidated-artifact rows (``common.bench_row``); smoke
+    configs are suffixed ``[smoke]`` so the CI gate never diffs a smoke
+    run against full-run baselines.
     """
-    out = {}
+    rows: list = []
+    suffix = "[smoke]" if smoke else ""
     cases = [
         ("midW", 1 << 13, 64 if smoke else 320, 24),
         ("largeW", 1 << 21, 48 if smoke else 192, 32),
     ]
     for name, universe, n_sets, mean_len in cases:
+        cfg = f"method_axis/{name}{suffix}"
         rng = np.random.default_rng(17)
         S = _zipf_collection(n_sets, universe, mean_len, rng)
         R = _perturbed_from(S, rng, mean_len)
         W = max((universe + 31) // 32, 1)
         m, n = len(R), len(S)
         oracle = brute_force_join(R, S, T)
-        case: dict = {"universe": universe, "w_words": W, "m": m, "n": n,
-                      "result_pairs": len(oracle)}
+        base = {"universe": universe, "w_words": W, "m": m, "n": n,
+                "result_pairs": len(oracle)}
 
         # --- flat LFVT: always runs; S-side bytes ~ Σ|seq| + O(U) ----- #
-        lstats: dict = {}
-        cf_rs_join_device(R, S, T, method="lfvt", stats=lstats)  # compile
-        got, t_lfvt = timed(
-            lambda: cf_rs_join_device(R, S, T, method="lfvt", stats=lstats),
-            repeat=1 if name == "largeW" else 2)
-        assert got == oracle, f"lfvt parity failed on {name}"
         flat = S.sort_by_size().flat_lfvt()
-        case["lfvt"] = {
-            "seconds": t_lfvt,
-            "s_rep_bytes": lstats["s_flat_bytes"],
-            "seq_tuple_bytes": lstats["s_flat_seq_bytes"],
+        shared = {
+            "seq_tuple_bytes": int(flat.seq_row.nbytes),
             "total_seq_tuples": len(flat.seq_row),
             "entry_rows": len(flat.entry_elem),
             "entry_table_bytes": int(flat.entry_elem.nbytes * 4),
-            "join_intermediate_bytes": min(m, 1024) * n * 4,  # counts tile
         }
-        emit(f"method_axis/{name}/lfvt", t_lfvt,
-             f"s_rep_bytes={lstats['s_flat_bytes']}"
-             f";bitmap_equiv={lstats['s_bitmap_bytes_equiv']}"
-             f";pairs={len(got)}")
+        method_of = {"kernel": "lfvt", "ref": "lfvt_ref"}
+        stats_of: dict = {}
+        for impl in impls:  # compile + parity before any clock starts
+            lstats: dict = {}
+            got = cf_rs_join_device(R, S, T, method=method_of[impl],
+                                    stats=lstats)
+            assert got == oracle, f"lfvt[{impl}] parity failed on {name}"
+            stats_of[impl] = lstats
+        # interleaved rounds: both impls see the same machine conditions,
+        # so the kernel_vs_ref ratio is a paired comparison, not two
+        # wall-clock phases a noisy runner can skew independently
+        runs: dict = {impl: [] for impl in impls}
+        for _ in range(5):
+            for impl in impls:
+                _, dt = timed(lambda m=method_of[impl]:
+                              cf_rs_join_device(R, S, T, method=m))
+                runs[impl].append(dt)
+        times = {impl: min(rs) for impl, rs in runs.items()}
+        for impl in impls:
+            t_impl, lstats = times[impl], stats_of[impl]
+            metrics = dict(base, seconds=t_impl, **shared,
+                           s_rep_bytes=lstats["s_flat_bytes"],
+                           s_flat_bytes=lstats["s_flat_bytes"],
+                           s_bitmap_bytes_equiv=lstats[
+                               "s_bitmap_bytes_equiv"])
+            if impl == "kernel":
+                metrics.update(
+                    walk_steps=lstats["walk_steps"],
+                    early_stops=lstats["early_stops"],
+                    live_tiles=lstats["live_tiles"],
+                    total_tiles=lstats["total_tiles"],
+                    # lockstep upper bound the early exits undercut
+                    walk_steps_bound=lstats["total_tiles"]
+                    * flat.max_seq_len)
+            rows.append(bench_row(cfg, "lfvt", impl, metrics))
+            emit(f"method_axis/{name}/lfvt[{impl}]", t_impl,
+                 f"s_rep_bytes={lstats['s_flat_bytes']}"
+                 f";bitmap_equiv={lstats['s_bitmap_bytes_equiv']}"
+                 f";pairs={len(got)}"
+                 + (f";walk_steps={lstats['walk_steps']}"
+                    f";early_stops={lstats['early_stops']}"
+                    if impl == "kernel" else ""))
+        if "kernel" in times and "ref" in times:
+            # the ratio lands on the kernel row once both impls have run
+            for r in rows:
+                if (r["config"], r["method"], r["impl"]) == (
+                        cfg, "lfvt", "kernel"):
+                    r["metrics"]["kernel_vs_ref_walk_ratio"] = (
+                        times["kernel"] / max(times["ref"], 1e-9))
+            emit(f"method_axis/{name}/kernel_vs_ref", 0.0,
+                 f"ratio={times['kernel'] / max(times['ref'], 1e-9):.3f}")
+        t_lfvt = times.get("kernel", times.get("ref", 0.0))
 
         # --- bitmap popcount: feasibility-gated ----------------------- #
         s_bitmap_bytes = n * W * 4
         inter_default = _popcount_intermediate_bytes(m, n, W, 1024)
         feasible_default = inter_default <= INTERMEDIATE_BUDGET
-        bm: dict = {"s_rep_bytes": s_bitmap_bytes,
-                    "intermediate_bytes_default": inter_default,
-                    "feasible_at_default_block": feasible_default}
+        bm: dict = dict(base, s_rep_bytes=s_bitmap_bytes,
+                        intermediate_bytes_default=inter_default,
+                        feasible_at_default_block=feasible_default)
         # shrink r_block until the staged intermediate fits the budget
         r_block = 1024
         while (_popcount_intermediate_bytes(m, n, W, r_block)
@@ -293,36 +355,30 @@ def method_axis_sweep(smoke: bool = False) -> dict:
             emit(f"method_axis/{name}/popcount", t_bm,
                  f"s_rep_bytes={s_bitmap_bytes};r_block={r_block}"
                  f";feasible_default={feasible_default}")
-        case["bitmap"] = bm
+        rows.append(bench_row(cfg, "bitmap", "jnp", bm))
 
         # --- one-hot MXU formulation: universe-scan gated ------------- #
         oh_blocks = -(-universe // 512)
         if name == "largeW":
-            case["onehot"] = {
-                "seconds": None,
-                "skipped": f"scan over {oh_blocks} universe blocks",
-                "s_rep_bytes": s_bitmap_bytes,
-            }
+            rows.append(bench_row(cfg, "onehot", "jnp", dict(
+                base, seconds=None,
+                skipped=f"scan over {oh_blocks} universe blocks",
+                s_rep_bytes=s_bitmap_bytes)))
         else:
             cf_rs_join_device(R, S, T, method="onehot")
             got_o, t_oh = timed(
                 lambda: cf_rs_join_device(R, S, T, method="onehot"),
                 repeat=2)
             assert got_o == oracle, f"onehot parity failed on {name}"
-            case["onehot"] = {"seconds": t_oh,
-                              "s_rep_bytes": s_bitmap_bytes}
+            rows.append(bench_row(cfg, "onehot", "jnp", dict(
+                base, seconds=t_oh, s_rep_bytes=s_bitmap_bytes)))
             emit(f"method_axis/{name}/onehot", t_oh,
                  f"s_rep_bytes={s_bitmap_bytes}")
-
-        case["lfvt_vs_bitmap_rep_ratio"] = (
-            lstats["s_flat_bytes"] / max(s_bitmap_bytes, 1))
-        out[f"method_axis/{name}"] = case
-    return out
+    return rows
 
 
 if __name__ == "__main__":
     import argparse
-    import json
 
     from repro.core.measures import measure_names
 
@@ -332,22 +388,31 @@ if __name__ == "__main__":
                     help="similarity-measure axis (or 'all')")
     ap.add_argument("--method", nargs="+", default=["bitmap", "onehot"],
                     choices=["bitmap", "onehot", "lfvt", "all"],
-                    help="join-method axis; 'lfvt' adds the §9 "
+                    help="join-method axis; 'lfvt' adds the §9-§10 "
                          "bitmap-vs-onehot-vs-lfvt memory/time sweep")
+    ap.add_argument("--impl", nargs="+", default=["kernel", "ref"],
+                    choices=["kernel", "ref", "all"],
+                    help="lfvt walk execution layer(s): the live "
+                         "row-tiled walk kernel vs the PR-4 jnp walk")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep for CI (skips the infeasible cells)")
     ap.add_argument("--out", default=None,
-                    help="write results as JSON to this path")
+                    help="write the consolidated row artifact here")
+    ap.add_argument("--append", action="store_true",
+                    help="extend an existing --out artifact instead of "
+                         "overwriting (one BENCH json across benches)")
     args = ap.parse_args()
     ms = measure_names() if "all" in args.measure else tuple(args.measure)
     methods = ({"bitmap", "onehot", "lfvt"} if "all" in args.method
                else set(args.method))
-    res: dict = {}
+    impls = (("kernel", "ref") if "all" in args.impl
+             else tuple(args.impl))
+    rows: list = []
     if methods & {"bitmap", "onehot"}:
-        res.update(main(measures=ms))
+        for tag, metrics in main(measures=ms).items():
+            rows.append(bench_row(f"kernel/{tag}", "microbench", "jnp",
+                                  metrics))
     if "lfvt" in methods:
-        res.update(method_axis_sweep(smoke=args.smoke))
+        rows.extend(method_axis_sweep(smoke=args.smoke, impls=impls))
     if args.out:
-        with open(args.out, "w") as fh:
-            json.dump(res, fh, indent=2, sort_keys=True)
-        print(f"# wrote {args.out}")
+        write_bench_json(args.out, rows, append=args.append)

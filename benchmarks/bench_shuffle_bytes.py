@@ -13,9 +13,11 @@ global-max vs bucketed shard packing (reduce bytes, peak resident mask,
 padding waste).
 
 CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]
-[--measure jaccard cosine ... | all]`` — ``--smoke`` runs a tiny
-single-dataset sweep (CI); ``--out`` writes the result dict as JSON (the
-BENCH artifact); ``--measure`` adds the similarity-measure axis (per-
+[--append] [--measure jaccard cosine ... | all]`` — ``--smoke`` runs a
+tiny single-dataset sweep (CI); ``--out`` writes the consolidated
+``{config, method, impl, metrics}`` row artifact (``--append`` extends
+an existing one, so this bench and bench_kernels share one
+BENCH_pr5.json); ``--measure`` adds the similarity-measure axis (per-
 measure windows change R replication, shard loads and result density —
 DESIGN.md §8).
 """
@@ -27,7 +29,7 @@ from repro.core.baselines import fs_join, mr_rp_ppjoin
 from repro.core.distributed import mr_cf_rs_join
 from repro.data.synth import make_join_dataset, make_skew_dataset
 
-from .common import emit
+from .common import bench_row, emit, write_bench_json
 
 SHARDS = 8
 
@@ -133,7 +135,6 @@ def main(smoke: bool = False, measures=("jaccard",)) -> dict:
 
 if __name__ == "__main__":
     import argparse
-    import json
 
     from repro.core.measures import measure_names
 
@@ -141,7 +142,10 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny single-dataset sweep (CI smoke)")
     ap.add_argument("--out", default=None,
-                    help="write results as JSON to this path")
+                    help="write the consolidated row artifact here")
+    ap.add_argument("--append", action="store_true",
+                    help="extend an existing --out artifact instead of "
+                         "overwriting")
     ap.add_argument("--measure", nargs="+", default=["jaccard"],
                     choices=list(measure_names()) + ["all"],
                     help="similarity-measure axis (or 'all')")
@@ -150,7 +154,7 @@ if __name__ == "__main__":
           else tuple(args.measure))
     res = main(smoke=args.smoke, measures=ms)
     if args.out:
-        flat = {"/".join(map(str, k)): v for k, v in res.items()}
-        with open(args.out, "w") as fh:
-            json.dump(flat, fh, indent=2, sort_keys=True)
-        print(f"# wrote {args.out}")
+        suffix = "[smoke]" if args.smoke else ""
+        rows = [bench_row("/".join(map(str, k)) + suffix, "mr", "jnp", v)
+                for k, v in res.items()]
+        write_bench_json(args.out, rows, append=args.append)

@@ -1,0 +1,105 @@
+"""CI bench-regression gate: diff two consolidated BENCH artifacts.
+
+Compares the current (smoke-run) ``BENCH_pr5.json`` against the
+committed baseline row-by-row — rows are keyed ``(config, method,
+impl)`` — and fails (exit 1) when any **tracked** metric regresses by
+more than ``--threshold`` (default 25%). Tracked metrics are
+lower-is-better:
+
+  * deterministic byte/step accounting (``reduce_bytes_compacted``,
+    ``s_flat_bytes``, ``walk_steps``, ...) — compared strictly; these
+    move only when someone changes the algorithm, so a >25% jump is a
+    real regression;
+  * the timing ratio ``kernel_vs_ref_walk_ratio`` (kernel seconds / ref
+    seconds for the LFVT walk) — compared with a noise floor: shared CI
+    runners jitter wall clocks, so the gate only fails when the ratio
+    is both >25% over baseline *and* above ``RATIO_NOISE_FLOOR`` (the
+    kernel actually lost to the jnp walk by a margin noise cannot
+    explain).
+
+Rows present on only one side are reported but never fail the gate
+(configs come and go with sweep changes); a missing tracked metric on
+one side is likewise skipped. Non-numeric metric values are ignored.
+
+CLI: ``python -m benchmarks.check_regression CURRENT --baseline
+BASELINE [--threshold 0.25]``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import load_bench_rows
+
+# lower-is-better metrics the gate watches (when present on both sides)
+TRACKED_METRICS = (
+    "reduce_bytes_compacted",   # shard-sparse reduce output (Fig. 8)
+    "mr_cf",                    # map-phase shuffle bytes, ours
+    "reduce_bytes_sparse",      # skew-sweep compacted reduce bytes
+    "s_flat_bytes",             # flat-LFVT device rep footprint
+    "s_rep_bytes",              # per-method S-side representation
+    "walk_steps",               # executed lockstep walk steps
+    "kernel_vs_ref_walk_ratio",  # LFVT walk kernel vs jnp-walk seconds
+)
+# wall-clock ratios only fail above this absolute value: below it the
+# kernel still beats (or matches) the reference within runner noise
+RATIO_NOISE_FLOOR = 1.25
+
+
+def compare(current: dict, baseline: dict, threshold: float = 0.25,
+            tracked=TRACKED_METRICS) -> tuple[list, list]:
+    """-> (regressions, notes); each entry is a printable string."""
+    regressions: list = []
+    notes: list = []
+    for key in sorted(set(current) | set(baseline)):
+        if key not in current or key not in baseline:
+            side = "baseline" if key not in current else "current"
+            notes.append(f"only in {side}: {'/'.join(key)}")
+            continue
+        cur_m, base_m = current[key], baseline[key]
+        for name in tracked:
+            cur, base = cur_m.get(name), base_m.get(name)
+            if not isinstance(cur, (int, float)) or not isinstance(
+                    base, (int, float)) or isinstance(cur, bool):
+                continue
+            limit = base * (1.0 + threshold)
+            if name.endswith("_ratio"):
+                limit = max(limit, RATIO_NOISE_FLOOR)
+            if cur > limit:
+                regressions.append(
+                    f"{'/'.join(key)} :: {name} regressed "
+                    f"{base:g} -> {cur:g} (limit {limit:g})")
+            elif base > 0 and cur < base * (1.0 - threshold):
+                notes.append(
+                    f"{'/'.join(key)} :: {name} improved "
+                    f"{base:g} -> {cur:g} — refresh the baseline to "
+                    "lock it in")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly generated BENCH artifact")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH artifact")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression tolerance (default 0.25)")
+    args = ap.parse_args(argv)
+    current = load_bench_rows(args.current)
+    baseline = load_bench_rows(args.baseline)
+    regressions, notes = compare(current, baseline, args.threshold)
+    for line in notes:
+        print(f"note: {line}")
+    if regressions:
+        print(f"FAIL: {len(regressions)} tracked metric(s) regressed "
+              f"beyond {args.threshold:.0%}:")
+        for line in regressions:
+            print(f"  {line}")
+        return 1
+    print(f"OK: no tracked metric regressed beyond {args.threshold:.0%} "
+          f"({len(current)} current rows vs {len(baseline)} baseline rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

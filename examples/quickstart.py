@@ -33,7 +33,9 @@ for name, result in [
     ("CF-RS-Join/LFVT (paper, host)", cf_rs_join_lfvt(R, S, t)),
     ("tile join popcount (device)", cf_rs_join_device(R, S, t, "popcount")),
     ("tile join one-hot (device)", cf_rs_join_device(R, S, t, "onehot")),
-    ("flat-LFVT array walk (device)", cf_rs_join_device(R, S, t, "lfvt")),
+    ("flat-LFVT walk kernel (device)", cf_rs_join_device(R, S, t, "lfvt")),
+    ("flat-LFVT jnp walk (lfvt_ref)", cf_rs_join_device(R, S, t,
+                                                        "lfvt_ref")),
     ("Pallas bitmap kernel", cf_rs_join_device(R, S, t, "kernel_bitmap")),
     ("MR-CF-RS-Join (8 shards)", mr_cf_rs_join(R, S, t, 8)),
     ("MR-CF-RS-Join/LFVT (8 shards)", mr_cf_rs_join(R, S, t, 8,

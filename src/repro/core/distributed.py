@@ -401,7 +401,7 @@ def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
 # ---------------------------------------------------------------------- #
 def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
                     *, emit: str, pair_capacity: int | None, measure: str,
-                    stats: dict | None) -> set:
+                    stats: dict | None, impl: str = "kernel") -> set:
     """Per-shard flat-LFVT reduce on the sequential loop path.
 
     The map side routes rows exactly like the bitmap paths, but each
@@ -410,7 +410,11 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
     trees, and nothing |S|·W-shaped is ever materialized (the per-shard
     arrays are ragged, which is why this path is loop-only). Shards
     stream double-buffered: shard k+1's walk is dispatched before shard
-    k's pair count syncs.
+    k's pair count syncs. ``impl='kernel'`` (method='lfvt') runs each
+    shard's emit='pairs' reduce through the live row-tiled walk kernel
+    dispatch (DESIGN.md §10) and mirrors its walk_steps/early_stops/
+    live_tiles stats; ``impl='ref'`` (method='lfvt_ref') keeps the PR-4
+    whole-block jnp walk, which the emit='mask' fallback uses for both.
 
     Raggedness also means the jitted walk specializes per shard shape
     (mb, n, E, T, max|seq| all differ), so every shard pays a trace —
@@ -426,7 +430,8 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
     r_pad_all, _ = R.padded()
     pairs: set = set()
     acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
-           "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0}
+           "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0,
+           "walk_steps": 0, "early_stops": 0, "live": 0}
 
     def dispatch(k: int) -> dict | None:
         rs, ss = r_rows[k], s_rows[k]
@@ -442,10 +447,13 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
         acc["dense"] += len(rs) * len(ss)
         acc["shards"] += 1
         ctx = {"rs": rs, "flat": flat}
-        if emit == "pairs":
+        if emit == "pairs" and impl == "ref":
             ctx["pending"] = kops.lfvt_join_pairs_dispatch(
                 flat, jnp.asarray(r_pad), jnp.asarray(sz), jnp.asarray(lo),
                 jnp.asarray(hi), t, measure=measure)
+        elif emit == "pairs":
+            ctx["pending"] = kops.lfvt_walk_join_pairs_dispatch(
+                flat, r_pad, sz, lo, hi, t, measure=measure)
         else:
             ctx["mask"] = flat_join_mask(flat, r_pad, sz, lo, hi, t, measure)
         return ctx
@@ -460,6 +468,9 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
             acc["reduce"] += 8 * nk + 4 + kstats.get("counts_bytes", 0)
             acc["regrows"] += kstats.get("regrows", 0)
             acc["result"] += nk
+            acc["walk_steps"] += kstats.get("walk_steps", 0)
+            acc["early_stops"] += kstats.get("early_stops", 0)
+            acc["live"] += kstats.get("live_tiles", 0)
             mask_cells = len(rs) * flat.n_sets
             acc["peak_mask"] = max(acc["peak_mask"], mask_cells)
             acc["peak_inter"] = max(
@@ -498,6 +509,8 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
             dense_mask_bytes=acc["dense"],
             reduce_intermediate_peak_bytes=acc["peak_inter"],
             reduce_mask_peak_bytes=acc["peak_mask"],
+            walk_steps=acc["walk_steps"], early_stops=acc["early_stops"],
+            live_tiles=acc["live"],
             regrows=acc["regrows"], pad="ragged", n_buckets=acc["shards"],
             shard_block_bytes=acc["ship"],
             shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
@@ -541,11 +554,14 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
     method:   'popcount' | 'onehot' | 'kernel_bitmap' | 'kernel_onehot'
-              (shard-local tile joins over bitmap blocks) | 'lfvt' —
-              loop-path only: each shard's S partition is compiled to a
-              ``FlatLFVT`` and shipped as plain int32 arrays (DESIGN.md
-              §9); nothing |S|·W-shaped is materialized, so it serves
-              universes where the bitmap packing is infeasible.
+              (shard-local tile joins over bitmap blocks) | 'lfvt' /
+              'lfvt_ref' — loop-path only: each shard's S partition is
+              compiled to a ``FlatLFVT`` and shipped as plain int32
+              arrays (DESIGN.md §9); nothing |S|·W-shaped is
+              materialized, so it serves universes where the bitmap
+              packing is infeasible. 'lfvt' reduces through the live
+              row-tiled walk kernel (DESIGN.md §10, walk stats
+              mirrored); 'lfvt_ref' keeps the PR-4 whole-block jnp walk.
     measure:  'jaccard' | 'cosine' | 'dice' | 'overlap' — qualify
               predicate, per-shard windows and map-phase R replication all
               specialize per measure (DESIGN.md §8)
@@ -585,16 +601,18 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         t, max(int(R.sizes().max(initial=0)), int(S.sizes().max(initial=0))))
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
         R, S, t, n_shards, measure=measure)
-    if method == "lfvt":
+    if method in ("lfvt", "lfvt_ref"):
         # per-shard flat arrays are ragged (node/seq counts differ), so
         # the shard_map stacked layout cannot hold them — loop path only
         if mesh is not None:
             raise ValueError(
-                "method='lfvt' runs on the loop path only (mesh=None); "
-                "per-shard FlatLFVT arrays are ragged")
+                f"method={method!r} runs on the loop path only (mesh=None);"
+                " per-shard FlatLFVT arrays are ragged")
         return _lfvt_loop_join(R, S, t, part, emit=emit,
                                pair_capacity=pair_capacity, measure=measure,
-                               stats=stats)
+                               stats=stats,
+                               impl="ref" if method == "lfvt_ref" else
+                               "kernel")
     pad_mode = pad if pad != "auto" else ("global" if mesh is not None
                                           else "bucket")
     if mesh is not None and pad_mode != "global":

@@ -26,6 +26,12 @@ Array schema (node 0 is the root: empty sequence, parent -1):
                                        rows into the size-sorted S —
                                        (set id, size) = (s_ids[row],
                                        s_sizes[row])
+               seq_next         (T,)   the position the rootward walk
+                                       visits after p (-1 past the
+                                       root): the node_seq_off/seq_len/
+                                       parent columns fused into one
+                                       hop, so walk kernels pay one
+                                       gather per step (DESIGN.md §10)
   entry table  entry_elem       (E,)   sorted distinct element ids with
                                        a non-empty seq (E <= Σ|seq|);
                                        lookup is a binary search
@@ -74,6 +80,7 @@ class FlatLFVTDevice(NamedTuple):
     node_seq_len: jax.Array
     node_parent: jax.Array
     seq_row: jax.Array
+    seq_next: jax.Array
     s_sizes: jax.Array
 
 
@@ -89,6 +96,7 @@ class FlatLFVT:
     owner_indptr: np.ndarray   # (N+1,)
     owner_elems: np.ndarray    # (#distinct elements,)
     seq_row: np.ndarray        # (T,) rows into the size-sorted S
+    seq_next: np.ndarray       # (T,) fused rootward hop (-1 past root)
     entry_elem: np.ndarray     # (E,) sorted present element ids
     entry_node: np.ndarray     # (E,)
     entry_off: np.ndarray      # (E,)
@@ -164,7 +172,7 @@ class FlatLFVT:
                 jnp.asarray(self.node_seq_off),
                 jnp.asarray(self.node_seq_len),
                 jnp.asarray(self.node_parent), jnp.asarray(self.seq_row),
-                jnp.asarray(self.s_sizes))
+                jnp.asarray(self.seq_next), jnp.asarray(self.s_sizes))
         return self._device
 
 
@@ -258,11 +266,22 @@ def encode(S: SetCollection, tree: FVT | LFVT | None = None) -> FlatLFVT:
                                    for o in owner_lists if o])
                    if owner_counts.sum() else np.zeros(0, np.int32))
 
+    # fused rootward hop: within a node the walk moves to the previous
+    # position; at a node's first position it jumps to the parent's last
+    # (-1 once the parent is the empty-sequence root)
+    T = len(rows)
+    seq_next = np.arange(-1, T - 1, dtype=np.int32)
+    nonroot = np.nonzero(seq_len > 0)[0]
+    par = parent[nonroot]
+    par_end = np.where(seq_len[par] > 0,
+                       seq_off[par] + seq_len[par] - 1, -1).astype(np.int32)
+    seq_next[seq_off[nonroot]] = par_end
+
     return FlatLFVT(
         node_seq_off=seq_off, node_seq_len=seq_len, node_parent=parent,
         child_indptr=child_indptr, child_ids=child_ids,
         owner_indptr=owner_indptr, owner_elems=owner_elems,
-        seq_row=np.asarray(rows, np.int32),
+        seq_row=np.asarray(rows, np.int32), seq_next=seq_next,
         entry_elem=entry_elem, entry_node=entry_node, entry_off=entry_off,
         entry_len=entry_len,
         s_ids=Ss.ids.astype(np.int32), s_sizes=Ss.sizes().astype(np.int32),

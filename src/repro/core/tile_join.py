@@ -305,10 +305,16 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
             | 'kernel_bitmap' | 'kernel_onehot' (Pallas, interpret on CPU)
-            | 'lfvt' (flat-array LFVT walk, DESIGN.md §9 — S-side device
-            memory ~ Σ|seq| tuples plus E ≤ Σ|seq| sparse entry rows,
-            never O(U), instead of the |S|·⌈U/32⌉ bitmap sheet; the
-            path for large element universes).
+            | 'lfvt' (flat-array LFVT walk, DESIGN.md §9-§10 — S-side
+            device memory ~ Σ|seq| tuples plus E ≤ Σ|seq| sparse entry
+            rows, never O(U), instead of the |S|·⌈U/32⌉ bitmap sheet;
+            the path for large element universes; with emit='pairs' it
+            runs the live row-tiled walk kernel — Mosaic on TPU, its
+            compiled jnp twin elsewhere — with walk_steps/early_stops/
+            live_tiles stats; the emit='mask' fallback uses the jnp walk
+            for both lfvt methods) | 'lfvt_ref' (the PR-4 whole-block
+            jnp walk, kept as the reference fallback and the
+            `--impl ref` bench axis).
     measure: 'jaccard' | 'cosine' | 'dice' | 'overlap' (DESIGN.md §8) —
             the qualify predicate and Lemma-3.1 window both specialize.
     emit:   'pairs' (default) — qualifying pairs are compacted on device
@@ -333,7 +339,7 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                          double_buffered=double_buffer, regrows=0,
                          r_rep_cache_hits=0)
         return set()
-    family = ("lfvt" if method == "lfvt" else
+    family = ("lfvt" if method in ("lfvt", "lfvt_ref") else
               "onehot" if method == "onehot" else "bitmap")
     universe = max(R.universe, S.universe)
     W = max((universe + 31) // 32, 1)
@@ -344,9 +350,9 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         t, max(int(r_sizes_all.max(initial=0)), int(s_sizes.max(initial=0))))
     lo_all, hi_all = window_bounds(r_sizes_all, s_sizes, t, measure)
 
-    kernel_pairs = method in ("kernel_bitmap", "kernel_onehot", "lfvt") and (
-        emit == "pairs")
-    if method in ("kernel_bitmap", "kernel_onehot", "lfvt"):
+    kernel_methods = ("kernel_bitmap", "kernel_onehot", "lfvt", "lfvt_ref")
+    kernel_pairs = method in kernel_methods and emit == "pairs"
+    if method in kernel_methods:
         from repro.kernels import ops as kops  # deferred: optional dep
 
     pairs: set = set()
@@ -356,7 +362,8 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
     spec_cap = round_capacity(pair_capacity) if pair_capacity else (
         PAIR_CAP_GRAIN)
     acc = {"out_sparse": 0, "out_dense": 0, "n_pairs": 0, "live": 0,
-           "total_tiles": 0, "regrows": 0, "r_rep_hits": 0}
+           "total_tiles": 0, "regrows": 0, "r_rep_hits": 0,
+           "walk_steps": 0, "early_stops": 0}
 
     def dispatch(start: int) -> dict:
         """Launch all of one R block's device work; no host syncs."""
@@ -378,11 +385,17 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                 blk["pending"] = kops.onehot_join_pairs_dispatch(
                     r_rep, r_sz, s_rep, s_sz, lo, hi, t, universe=universe,
                     measure=measure)
-            else:  # lfvt: whole-block mask as one live tile
+            elif method == "lfvt":
+                # live row-tiled walk kernel; host np row metadata so the
+                # dispatch plans tiles without syncing device arrays
+                blk["pending"] = kops.lfvt_walk_join_pairs_dispatch(
+                    s_rep, r_rep, r_sizes_all[sl], lo_all[sl], hi_all[sl],
+                    t, measure=measure)
+            else:  # lfvt_ref: whole-block jnp walk as one live tile
                 blk["pending"] = kops.lfvt_join_pairs_dispatch(
                     s_rep, r_rep, r_sz, lo, hi, t, measure=measure)
             return blk
-        if method == "lfvt":
+        if method in ("lfvt", "lfvt_ref"):
             from .lfvt_flat import flat_join_mask
             mask = flat_join_mask(s_rep, r_rep, r_sz, lo, hi, t, measure)
         elif method == "popcount":
@@ -421,6 +434,8 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             acc["live"] += kstats.get("live_tiles", 0)
             acc["total_tiles"] += kstats.get("total_tiles", 0)
             acc["regrows"] += kstats.get("regrows", 0)
+            acc["walk_steps"] += kstats.get("walk_steps", 0)
+            acc["early_stops"] += kstats.get("early_stops", 0)
         elif emit == "pairs":
             n_pairs = int(blk["total"])  # the only host sync per block
             cap = spec_cap
@@ -472,7 +487,10 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         if kernel_pairs:
             stats["live_tiles"] = acc["live"]
             stats["total_tiles"] = acc["total_tiles"]
-        if method == "lfvt":
+        if method == "lfvt" and kernel_pairs:
+            stats["walk_steps"] = acc["walk_steps"]
+            stats["early_stops"] = acc["early_stops"]
+        if method in ("lfvt", "lfvt_ref"):
             # the §9 memory axis: what the flat S rep holds on device vs
             # what the bitmap sheet would have cost at this universe
             stats["s_flat_bytes"] = s_rep.nbytes()

@@ -1,0 +1,338 @@
+"""Pallas scalar-prefetch kernel for the flat-LFVT array walk (DESIGN.md §10).
+
+``core/lfvt_flat.py`` turned the paper's winning CF-RS-Join/LFVT into a
+device-resident array walk, but PR 4 executed it as plain jnp: a
+``fori_loop`` over ``max|seq|`` steps that re-materializes a full
+``(mb, n)`` scatter-add array per step and always runs the global
+worst-case step count, even after every lane has died. This module is
+the Mosaic execution layer for that walk:
+
+  * **1-D live row-tile grid** (PR 1's live-tile schedule, collapsed to
+    rows): the R block is sorted by set size (rows with near-identical
+    Lemma-3.1 windows share a tile) and cut into ``ROW_TILE``-row tiles;
+    tiles whose windows exclude every S column never enter the grid.
+  * **Scalar prefetch** (``PrefetchScalarGridSpec``): the live-tile ids,
+    the per-R-element entry rows (resolved to lane ``(position,
+    remaining)`` pairs) and the ``node_seq_off/seq_len/parent`` columns
+    — prefetched in their fused form, the ``seq_next`` hop column the
+    encoder derives from exactly those three — ride in SMEM ahead of
+    the body, steering the per-tile block DMAs like the bitmap
+    live-tile kernel's ``(ti, tj)`` lists.
+  * **VMEM-resident count tile**: each grid step owns one
+    ``(ROW_TILE, S_cols)`` int32 overlap-count tile that stays on-chip
+    across all walk steps — nothing ``(mb, n)``-shaped is re-built per
+    step, and only the qualifying boolean sub-mask + exact pair count
+    leave the core.
+  * **Per-step early stop** (Theorem 3.3): walk rows strictly decrease,
+    so a lane whose emitted row drops below its window's ``lo`` is dead
+    for every later step; the walk is a ``while_loop`` that exits as
+    soon as the tile has no live lanes. Dead walk rows cost no VMEM
+    traffic — their steps never execute. ``walk_steps``/``early_stops``
+    are emitted per tile so drivers can report the savings.
+
+Off-TPU, interpret mode is a correctness harness, not an execution
+path: ``ops.lfvt_walk_join_pairs_dispatch`` runs
+``lfvt_walk_live_tiled_ref`` — the XLA-compiled jnp twin of the exact
+same tiled schedule (bit-identical masks/counts/stats) — and reserves
+the interpreted Pallas kernel for the parity tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import measures
+
+__all__ = ["DEFAULT_ROW_TILE", "COL_PAD", "plan_row_tiles", "entry_state",
+           "lfvt_walk_live_tiled", "lfvt_walk_live_tiled_ref"]
+
+# Rows per grid step (multiple of the int32 sublane 8). Small tiles keep
+# each tile's while_loop bound at its own slowest lane — one hot element
+# serializes its tile, not the whole block; 16 balances that against
+# per-tile launch overhead on the compiled-twin path.
+DEFAULT_ROW_TILE = 16
+# Lane (last-dim) padding multiple for the count tile / S-size row.
+COL_PAD = 128
+# The scalar-prefetch operands (lane entry rows + the fused seq columns)
+# are SMEM-resident on real hardware and scale with Mp·Lr + Σ|seq|, so
+# the auto dispatch falls back to the compiled jnp twin beyond this
+# budget instead of failing Mosaic allocation at exactly the
+# large-universe workloads the path serves. Feeding the lane state
+# through BlockSpec'd VMEM instead is the ROADMAP follow-up that lifts
+# the bound.
+SMEM_PREFETCH_BUDGET = 1 << 20
+
+
+def prefetch_fits_smem(mp: int, lr: int, tp: int,
+                       budget: int = SMEM_PREFETCH_BUDGET) -> bool:
+    """True when the kernel's scalar-prefetch working set — two (mp, lr)
+    int32 lane arrays + the (tp,) seq_row/seq_next columns — fits the
+    budget (the live-tile id list is noise)."""
+    return 4 * (2 * mp * lr + 2 * tp) <= budget
+
+
+def plan_row_tiles(lo: np.ndarray, hi: np.ndarray, tm: int) -> np.ndarray:
+    """Live row-tile ids: tiles where at least one row has a non-empty
+    [lo, hi) window. Everything else is skipped before launch (the 1-D
+    analogue of ``ops._live_tiles``); host numpy because the result
+    parameterizes the grid."""
+    m_tiles = len(lo) // tm
+    live = (np.asarray(lo).reshape(m_tiles, tm)
+            < np.asarray(hi).reshape(m_tiles, tm)).any(axis=1)
+    return np.nonzero(live)[0].astype(np.int32)
+
+
+@jax.jit
+def entry_state(dev, r_padded):
+    """Resolve the per-R-element entry rows: (mb, Lr) element lists ->
+    lane (walk position, remaining steps) pairs, parked at (0, 0) for -1
+    pads and absent elements (binary search over the sparse entry table,
+    exactly like the jnp walk).
+
+    Each row's lanes come back sorted by remaining walk length
+    (descending). Counts, masks and the step/stop counters are invariant
+    to lane order within a row, but the sort lets the compiled twin run
+    its live-lane staircase: once every lane right of a pow2 boundary is
+    dead, the walk continues on the narrowed slice, so scatter traffic
+    tracks the live lanes instead of Lr x max|seq| (the walk-length-skew
+    analogue of the live-tile schedule)."""
+    E = dev.entry_elem.shape[0]
+    idx = jnp.minimum(jnp.searchsorted(dev.entry_elem, r_padded), E - 1)
+    present = (r_padded >= 0) & (dev.entry_elem[idx] == r_padded)
+    pos = jnp.where(
+        present, dev.node_seq_off[dev.entry_node[idx]] + dev.entry_off[idx],
+        0).astype(jnp.int32)
+    rem = jnp.where(present, dev.entry_len[idx], 0).astype(jnp.int32)
+    order = jnp.argsort(-rem, axis=1)
+    return (jnp.take_along_axis(pos, order, axis=1),
+            jnp.take_along_axis(rem, order, axis=1))
+
+
+def _walk_tile(pos, rem, lo_col, nxt, seq, counts, accumulate,
+               max_steps: int):
+    """One tile's lockstep walk: early-exiting while_loop over at most
+    ``max_steps`` steps. Identical per-step emission order to the PR-4
+    jnp walk (``lfvt_flat._walk_counts``) — counts may differ from it
+    only at columns outside the window, which qualify masks off — plus
+    the step/stop counters. ``accumulate`` abstracts the count-tile
+    update (scatter-add for the compiled twin, iota-compare for the
+    Mosaic body); ``nxt`` is the fused node_seq_off/seq_len/parent hop
+    column, so a step costs two gathers and the update."""
+
+    def cond(state):
+        step, _, rem, _, _ = state
+        return (step < max_steps) & jnp.any(rem > 0)
+
+    def body(state):
+        step, pos, rem, counts, stops = state
+        active = rem > 0
+        safe = jnp.where(active, pos, 0)
+        row = seq[safe]
+        counts = accumulate(counts, row, active)
+        # window early stop (Theorem 3.3): walk rows strictly decrease,
+        # so row < lo means every remaining step is out-of-window too
+        stop = active & (row < lo_col)
+        stops = stops + jnp.sum(stop & (rem > 1), dtype=jnp.int32)
+        rem = jnp.where(active & ~stop, rem - 1, 0)
+        pos = jnp.where(rem > 0, jnp.maximum(nxt[safe], 0), 0)
+        return step + 1, pos, rem, counts, stops
+
+    init = (jnp.int32(0), pos, rem, counts, jnp.int32(0))
+    step, _, _, counts, stops = jax.lax.while_loop(cond, body, init)
+    return counts, step, stops
+
+
+def _qualify(counts, r_sz, s_sz, lo, hi, t, measure):
+    """Measure predicate + [lo, hi) column window on one count tile."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, counts.shape[1]), 1)
+    in_window = (cols >= lo) & (cols < hi)
+    return measures.device_qualify(counts, r_sz, s_sz, t, measure) & in_window
+
+
+# ---------------------------------------------------------------------- #
+# compiled jnp twin — the off-TPU execution path
+# ---------------------------------------------------------------------- #
+@functools.partial(jax.jit,
+                   static_argnames=("t", "measure", "max_steps", "tm"))
+def lfvt_walk_live_tiled_ref(ti, lane_pos, lane_rem, nxt2d, seq2d, ssz2d,
+                             rsz, lo, hi, *, t: float, measure: str,
+                             max_steps: int, tm: int):
+    """jnp twin of ``lfvt_walk_live_tiled`` — the XLA-compiled CPU path.
+
+    Same live row-tile schedule and per-step algebra as the Mosaic body,
+    with two CPU-shaped scheduling changes that leave every output and
+    counter bit-identical:
+
+      * the live tiles are batched into one (L·tm, Lr) lane block so the
+        whole block shares each loop step (XLA CPU pays per-op dispatch;
+        L sequential tile loops would multiply it);
+      * the walk runs as a **live-lane staircase**: lanes arrive sorted
+        by remaining length (``entry_state``), so once every lane right
+        of a pow2 column boundary is dead the loop continues on the
+        narrowed slice. Scatter traffic then tracks the live lanes —
+        one hot element no longer drags all Lr lane columns through
+        max|seq| steps (ROADMAP's walk-length-skew item).
+
+    Per-tile ``walk_steps``/``early_stops`` are maintained in-loop (a
+    tile's step counter advances only while it still has live lanes), so
+    masks, counts and stats match running each tile's while_loop
+    separately, which the parity tests pin against the Pallas kernel.
+
+    Returns (masks (L, tm, NP) bool, counts/steps/stops (L, 1) int32).
+    """
+    Lr = lane_pos.shape[1]
+    NP = ssz2d.shape[1]
+    L = ti.shape[0]
+    M = L * tm
+    seq = seq2d[0]
+    nxt = nxt2d[0]
+
+    def lanes(x):
+        return x.reshape(-1, tm, Lr)[ti].reshape(M, Lr)
+
+    def rows(x):
+        return x.reshape(-1, tm)[ti].reshape(M, 1)
+
+    r_sz, lo_c, hi_c = rows(rsz), rows(lo), rows(hi)
+    row_ix = jnp.broadcast_to(
+        jnp.arange(M, dtype=jnp.int32)[:, None], (M, Lr))
+
+    def stage_cond(w_next, w):
+        def cond(state):
+            step, _, rem, _, _, _ = state
+            outer = rem if w_next == 0 else rem[:, w_next:]
+            return (step < max_steps) & jnp.any(outer > 0)
+        return cond
+
+    def stage_body(w):
+        def body(state):
+            step, pos, rem, counts, stops, steps_t = state
+            active = rem > 0
+            steps_t = steps_t + jnp.any(
+                active.reshape(L, tm * w), axis=1).astype(jnp.int32)
+            safe = jnp.where(active, pos, 0)
+            row = seq[safe]
+            counts = counts.at[row_ix[:, :w],
+                               jnp.where(active, row, 0)].add(
+                active.astype(jnp.int32))
+            stop = active & (row < lo_c)
+            stops = stops + jnp.sum(
+                (stop & (rem > 1)).reshape(L, tm * w), axis=1,
+                dtype=jnp.int32)
+            rem = jnp.where(active & ~stop, rem - 1, 0)
+            pos = jnp.where(rem > 0, jnp.maximum(nxt[safe], 0), 0)
+            return step + 1, pos, rem, counts, stops, steps_t
+        return body
+
+    state = (jnp.int32(0), lanes(lane_pos), lanes(lane_rem),
+             jnp.zeros((M, NP), jnp.int32), jnp.zeros(L, jnp.int32),
+             jnp.zeros(L, jnp.int32))
+    w = Lr
+    while w:  # static pow2 staircase, ~log2(Lr) chained while_loops
+        w_next = (w + 1) // 2 if w > 1 else 0
+        state = jax.lax.while_loop(stage_cond(w_next, w), stage_body(w),
+                                   state)
+        step, pos, rem, counts, stops, steps_t = state
+        state = (step, pos[:, :w_next], rem[:, :w_next], counts, stops,
+                 steps_t)
+        w = w_next
+    _, _, _, counts, stops, steps_t = state
+    q = _qualify(counts, r_sz, ssz2d, lo_c, hi_c, t, measure)
+    masks = q.reshape(L, tm, NP)
+    cnts = jnp.sum(masks, axis=(1, 2), dtype=jnp.int32)
+    return (masks, cnts.reshape(L, 1), steps_t.reshape(L, 1),
+            stops.reshape(L, 1))
+
+
+# ---------------------------------------------------------------------- #
+# Pallas kernel — scalar-prefetched Mosaic body
+# ---------------------------------------------------------------------- #
+def _walk_kernel(ti_ref, lpos_ref, lrem_ref, nxt_ref, seq_ref, ssz_ref,
+                 rsz_ref, lo_ref, hi_ref, mask_ref, cnt_ref, steps_ref,
+                 stops_ref, acc_ref, *, t: float, measure: str,
+                 max_steps: int, tm: int):
+    # program_id read outside pl.when bodies (PR-1 interpreter shim rule)
+    l = pl.program_id(0)
+    base = ti_ref[l] * tm
+    # scalar-prefetched lane entry rows for this tile + the fused
+    # node_seq_off/seq_len/parent hop column
+    pos = lpos_ref[pl.ds(base, tm), :]
+    rem = lrem_ref[pl.ds(base, tm), :]
+    nxt = nxt_ref[...][0]
+    seq = seq_ref[...][0]
+    npad = acc_ref.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, npad), 2)
+
+    def onehot(counts, row, active):
+        # branchless count-tile update: a lane contributes 1 to exactly
+        # its emitted row's column (VPU compare + reduce, no scatter)
+        sel = jnp.where(active, row, -1)  # -1 matches no column
+        return counts + jnp.sum(sel[:, :, None] == iota, axis=1,
+                                dtype=jnp.int32)
+
+    counts0 = jnp.zeros_like(acc_ref)
+    counts, steps, stops = _walk_tile(pos, rem, lo_ref[...], nxt, seq,
+                                      counts0, onehot, max_steps)
+    acc_ref[...] = counts  # the tile's VMEM home; qualify reads it back
+    q = _qualify(acc_ref[...], rsz_ref[...], ssz_ref[...], lo_ref[...],
+                 hi_ref[...], t, measure)
+    mask_ref[...] = q[None]
+    cnt_ref[...] = jnp.sum(q, dtype=jnp.int32).reshape(1, 1)
+    steps_ref[...] = steps.reshape(1, 1)
+    stops_ref[...] = stops.reshape(1, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("t", "measure", "max_steps", "tm", "interpret"))
+def lfvt_walk_live_tiled(ti, lane_pos, lane_rem, nxt, seq2d, ssz2d, rsz,
+                         lo, hi, *, t: float, measure: str, max_steps: int,
+                         tm: int, interpret=False):
+    """Flat-LFVT walk over live row tiles only; see ops.lfvt_walk_join_pairs.
+
+    ti (L,) live row-tile ids; lane_pos/lane_rem (Mp, Lr) resolved entry
+    rows; nxt (1, Tp) fused hop column — all int32, scalar-prefetched.
+    seq2d (1, Tp) tuple rows, ssz2d (1, NP) padded S sizes, rsz/lo/hi
+    (Mp, 1). Returns (mask (L, tm, NP) bool, counts, walk_steps,
+    early_stops — each (L, 1) int32), all device-resident for the
+    ``PendingPairs`` compaction protocol.
+    """
+    L = ti.shape[0]
+    NP = ssz2d.shape[1]
+    assert rsz.shape[0] % tm == 0, (rsz.shape, tm)
+    kernel = functools.partial(_walk_kernel, t=t, measure=measure,
+                               max_steps=max_steps, tm=tm)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec(seq2d.shape, lambda l, *pf: (0, 0)),      # seq rows
+            pl.BlockSpec((1, NP), lambda l, *pf: (0, 0)),          # s sizes
+            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # r sizes
+            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # lo
+            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # hi
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tm, NP), lambda l, *pf: (l, 0, 0)),
+            pl.BlockSpec((1, 1), lambda l, *pf: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l, *pf: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l, *pf: (l, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((tm, NP), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((L, tm, NP), jnp.bool_),
+            jax.ShapeDtypeStruct((L, 1), jnp.int32),
+            jax.ShapeDtypeStruct((L, 1), jnp.int32),
+            jax.ShapeDtypeStruct((L, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ti, lane_pos, lane_rem, nxt, seq2d, ssz2d, rsz, lo, hi)

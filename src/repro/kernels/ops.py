@@ -37,7 +37,8 @@ __all__ = ["bitmap_join", "onehot_join", "bitmap_join_pairs",
            "onehot_join_pairs", "join_pairs", "pick_tiles", "round_capacity",
            "PAIR_CAP_GRAIN", "PendingPairs", "bitmap_join_pairs_dispatch",
            "onehot_join_pairs_dispatch", "lfvt_join_pairs",
-           "lfvt_join_pairs_dispatch", "join_pairs_finalize"]
+           "lfvt_join_pairs_dispatch", "lfvt_walk_join_pairs",
+           "lfvt_walk_join_pairs_dispatch", "join_pairs_finalize"]
 
 
 def _interpret_default():
@@ -216,6 +217,13 @@ class PendingPairs:
     live_tiles: int
     total_tiles: int
     dense_mask_bytes: int
+    # kernel-specific device counters (e.g. the LFVT walk's walk_steps /
+    # early_stops); summed into the caller's stats dict at finalize
+    extras: dict | None = None
+    # optional packed-row remap: the LFVT walk sorts R rows by size so
+    # row tiles hold near-identical windows; row_map[packed_row] is the
+    # original block row (-1 for capacity padding)
+    row_map: jax.Array | None = None
 
 
 def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
@@ -239,6 +247,15 @@ def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
                         TM, TN, L, m_tiles * n_tiles, m * n)
 
 
+@jax.jit
+def _remap_rows(pairs, row_map):
+    """Translate packed pair rows through ``row_map`` (-1 pads kept)."""
+    r = pairs[:, 0]
+    valid = r >= 0
+    rows = jnp.where(valid, row_map[jnp.where(valid, r, 0)], -1)
+    return jnp.stack([rows, pairs[:, 1]], axis=1)
+
+
 def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
                         stats: dict | None = None):
     """Sync a dispatched join's counts and compact -> (pairs, n_pairs)."""
@@ -247,6 +264,9 @@ def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
         stats["live_tiles"] = L
         stats["total_tiles"] = pending.total_tiles
         stats["dense_mask_bytes"] = pending.dense_mask_bytes
+        if pending.extras:
+            for key, dev in pending.extras.items():
+                stats[key] = int(np.asarray(dev).sum())
     if L == 0:
         if stats is not None:
             stats.update(pair_count=0, pair_bytes=0, counts_bytes=0,
@@ -264,6 +284,8 @@ def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
     pairs = (_compact_live(pending.masks, pending.tile_i, pending.tile_j,
                            tm=pending.tm, tn=pending.tn, size=cap)
              if cap else jnp.zeros((0, 2), jnp.int32))
+    if pending.row_map is not None and cap:
+        pairs = _remap_rows(pairs, pending.row_map)
     if stats is not None:
         stats["pair_count"] = total
         stats["pair_bytes"] = cap * 8          # what the packed array ships
@@ -362,13 +384,113 @@ def lfvt_join_pairs(flat, r_padded, r_sizes, lo, hi, t: float,
     return join_pairs_finalize(pending, capacity, stats)
 
 
+def lfvt_walk_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
+                                  measure: str = "jaccard",
+                                  impl: str | None = None,
+                                  row_tile: int | None = None,
+                                  interpret: bool | None = None
+                                  ) -> PendingPairs:
+    """Flat-LFVT walk as a live row-tiled kernel dispatch (DESIGN.md §10).
+
+    The R block is sorted by set size (rows with near-identical Lemma-3.1
+    windows share a tile), cut into ``row_tile``-row tiles, and row tiles
+    with empty windows are dropped before launch — PR 1's live-tile
+    schedule collapsed to one dimension, each surviving tile owning a
+    VMEM-resident ``(row_tile, n)`` count tile for the whole walk.
+
+    impl: None/'auto' — Mosaic kernel on TPU, the XLA-compiled jnp twin
+          elsewhere (interpret mode is a correctness harness, not an
+          execution path); auto also drops to the twin when the
+          scalar-prefetch working set would exceed the SMEM budget
+          (``lfvt_walk.prefetch_fits_smem``) instead of failing Mosaic
+          allocation; 'pallas' — force the Pallas kernel (interpret
+          off-TPU; what the parity tests pin); 'jnp' — force the twin.
+    Emits ``walk_steps``/``early_stops`` device counters via
+    ``PendingPairs.extras`` and the row sort via ``row_map``; the shared
+    finalize folds both back out.
+    """
+    from . import lfvt_walk as _lw
+
+    auto = impl in (None, "auto")
+    if auto:
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl not in ("pallas", "jnp"):
+        raise ValueError(f"unknown lfvt walk impl {impl!r}")
+    tm = row_tile or _lw.DEFAULT_ROW_TILE
+    r_padded = jnp.asarray(r_padded)
+    m, Lr = r_padded.shape
+    n = flat.n_sets
+    m_tiles = max(-(-m // tm), 1)
+    if (m == 0 or n == 0 or Lr == 0 or len(flat.entry_elem) == 0
+            or flat.max_seq_len == 0):
+        return PendingPairs(None, None, None, None, tm, max(n, 1), 0,
+                            m_tiles, m * n)
+    dev = flat.to_device()
+    # host-side plan: size-sorted row order, tile padding, live row tiles
+    order = np.argsort(-np.asarray(r_sizes), kind="stable").astype(np.int32)
+    pad_rows = (-m) % tm
+    lo_p = np.concatenate(
+        [np.asarray(lo)[order], np.zeros(pad_rows, np.int64)])
+    hi_p = np.concatenate(
+        [np.asarray(hi)[order], np.zeros(pad_rows, np.int64)])
+    sz_p = np.concatenate(
+        [np.asarray(r_sizes)[order], np.zeros(pad_rows, np.int64)])
+    m_tiles = (m + pad_rows) // tm
+    ti = _lw.plan_row_tiles(lo_p, hi_p, tm)
+    if len(ti) == 0:
+        return PendingPairs(None, None, None, None, tm, n, 0, m_tiles, m * n)
+    if (auto and impl == "pallas" and not _lw.prefetch_fits_smem(
+            m + pad_rows, Lr, len(flat.seq_row))):
+        impl = "jnp"  # over the SMEM prefetch budget: run the twin
+    r_perm = jnp.pad(jnp.take(r_padded, jnp.asarray(order), axis=0),
+                     ((0, pad_rows), (0, 0)), constant_values=-1)
+    lane_pos, lane_rem = _lw.entry_state(dev, r_perm)
+    seq2d = _pad_to(dev.seq_row.reshape(1, -1), 1, _lw.COL_PAD)
+    nxt2d = _pad_to(dev.seq_next.reshape(1, -1), 1, _lw.COL_PAD)
+    ssz2d = _pad_to(dev.s_sizes.reshape(1, -1), 1, _lw.COL_PAD)
+    args = (jnp.asarray(ti), lane_pos, lane_rem, nxt2d, seq2d, ssz2d,
+            jnp.asarray(sz_p, dtype=jnp.int32).reshape(-1, 1),
+            jnp.asarray(lo_p, dtype=jnp.int32).reshape(-1, 1),
+            jnp.asarray(hi_p, dtype=jnp.int32).reshape(-1, 1))
+    kw = dict(t=t, measure=measure, max_steps=int(flat.max_seq_len), tm=tm)
+    if impl == "pallas":
+        interpret = _interpret_default() if interpret is None else interpret
+        masks, counts, steps, stops = _lw.lfvt_walk_live_tiled(
+            *args, interpret=interpret, **kw)
+    else:
+        masks, counts, steps, stops = _lw.lfvt_walk_live_tiled_ref(
+            *args, **kw)
+    row_map = jnp.asarray(np.concatenate(
+        [order, np.full(pad_rows, -1, np.int32)]))
+    return PendingPairs(
+        masks, counts, jnp.asarray(ti), jnp.zeros(len(ti), jnp.int32),
+        tm, ssz2d.shape[1], len(ti), m_tiles, m * n,
+        extras={"walk_steps": steps, "early_stops": stops}, row_map=row_map)
+
+
+def lfvt_walk_join_pairs(flat, r_padded, r_sizes, lo, hi, t: float,
+                         capacity: int | None = None,
+                         stats: dict | None = None,
+                         measure: str = "jaccard", impl: str | None = None,
+                         row_tile: int | None = None,
+                         interpret: bool | None = None):
+    """Sparse kernel-walk flat-LFVT join; contract of ``bitmap_join_pairs``."""
+    pending = lfvt_walk_join_pairs_dispatch(
+        flat, r_padded, r_sizes, lo, hi, t, measure=measure, impl=impl,
+        row_tile=row_tile, interpret=interpret)
+    return join_pairs_finalize(pending, capacity, stats)
+
+
 def join_pairs(method: str, *args, **kw):
-    """Dispatch sparse emission by family ('bitmap' | 'onehot' | 'lfvt')."""
+    """Dispatch sparse emission by family ('bitmap' | 'onehot' | 'lfvt'
+    — the kernel walk — | 'lfvt_ref' — the PR-4 whole-block jnp walk)."""
     if method == "bitmap":
         return bitmap_join_pairs(*args, **kw)
     if method == "onehot":
         return onehot_join_pairs(*args, **kw)
     if method == "lfvt":
+        return lfvt_walk_join_pairs(*args, **kw)
+    if method == "lfvt_ref":
         return lfvt_join_pairs(*args, **kw)
     raise ValueError(f"unknown pair-emission method {method!r}")
 

@@ -1,0 +1,110 @@
+"""CI bench-regression gate + consolidated-artifact schema (ISSUE 5).
+
+Locks down ``benchmarks/check_regression.py`` and the shared
+``{config, method, impl, metrics}`` row artifact in
+``benchmarks/common.py``: round-trip + append semantics, numpy-scalar
+coercion, the schema-version guard, the 25% regression rule, the
+timing-ratio noise floor, improvement notes, and row-set drift being a
+note rather than a failure.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import (RATIO_NOISE_FLOOR, compare, main)
+from benchmarks.common import (SCHEMA_VERSION, bench_row, load_bench_rows,
+                               write_bench_json)
+
+
+def _rows(**metrics):
+    return {("method_axis/largeW", "lfvt", "kernel"): dict(metrics)}
+
+
+def test_no_change_passes():
+    base = _rows(s_flat_bytes=1000, kernel_vs_ref_walk_ratio=0.8)
+    reg, notes = compare(dict(base), dict(base))
+    assert reg == [] and notes == []
+
+
+def test_byte_metric_regression_fails():
+    base = _rows(s_flat_bytes=1000)
+    cur = _rows(s_flat_bytes=1300)  # +30% > 25%
+    reg, _ = compare(cur, base)
+    assert len(reg) == 1 and "s_flat_bytes" in reg[0]
+    # exactly at the limit passes (<=, not <)
+    reg, _ = compare(_rows(s_flat_bytes=1250), base)
+    assert reg == []
+
+
+def test_untracked_metrics_ignored():
+    base = _rows(seconds=1.0, result_pairs=10)
+    cur = _rows(seconds=9.0, result_pairs=99)
+    reg, _ = compare(cur, base)
+    assert reg == []
+
+
+def test_ratio_noise_floor():
+    # kernel still beats ref (ratio < floor): never a failure, even when
+    # the ratio moved far beyond 25% of a tiny baseline
+    base = _rows(kernel_vs_ref_walk_ratio=0.5)
+    cur = _rows(kernel_vs_ref_walk_ratio=1.1)
+    reg, _ = compare(cur, base)
+    assert reg == [] and RATIO_NOISE_FLOOR == 1.25
+    # a genuine loss (above floor AND >25% over baseline) fails
+    cur = _rows(kernel_vs_ref_walk_ratio=1.5)
+    reg, _ = compare(cur, base)
+    assert len(reg) == 1 and "ratio" in reg[0]
+
+
+def test_missing_rows_and_metrics_are_notes_not_failures():
+    base = {("disk/dblp/t0.875", "mr", "jnp"): {"mr_cf": 100}}
+    cur = {("skew/hash/global", "mr", "jnp"): {"reduce_bytes_sparse": 5}}
+    reg, notes = compare(cur, base)
+    assert reg == [] and len(notes) == 2
+    # metric present on one side only: skipped
+    reg, _ = compare(_rows(s_flat_bytes=10), _rows())
+    assert reg == []
+
+
+def test_improvement_emits_baseline_refresh_note():
+    reg, notes = compare(_rows(walk_steps=50), _rows(walk_steps=100))
+    assert reg == [] and any("refresh the baseline" in n for n in notes)
+
+
+def test_artifact_roundtrip_append_and_schema_guard(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    r1 = bench_row("cfg/a", "lfvt", "kernel",
+                   {"s_flat_bytes": np.int64(7), "ratio": np.float32(0.5)})
+    assert isinstance(r1["metrics"]["s_flat_bytes"], int)
+    assert isinstance(r1["metrics"]["ratio"], float)
+    write_bench_json(path, [r1])
+    write_bench_json(path, [bench_row("cfg/b", "mr", "jnp", {"x": 1})],
+                     append=True)
+    idx = load_bench_rows(path)
+    assert set(idx) == {("cfg/a", "lfvt", "kernel"), ("cfg/b", "mr", "jnp")}
+    assert idx[("cfg/a", "lfvt", "kernel")]["s_flat_bytes"] == 7
+    # append to a missing file degrades to a plain write
+    path2 = str(tmp_path / "fresh.json")
+    write_bench_json(path2, [r1], append=True)
+    assert ("cfg/a", "lfvt", "kernel") in load_bench_rows(path2)
+    # schema-version mismatch is a hard error, not a silent pass
+    with open(path, "w") as fh:
+        json.dump({"schema_version": SCHEMA_VERSION + 1, "rows": []}, fh)
+    with pytest.raises(ValueError, match="schema_version"):
+        load_bench_rows(path)
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    base_p = str(tmp_path / "base.json")
+    cur_p = str(tmp_path / "cur.json")
+    write_bench_json(base_p, [bench_row("c", "lfvt", "kernel",
+                                        {"walk_steps": 100})])
+    write_bench_json(cur_p, [bench_row("c", "lfvt", "kernel",
+                                       {"walk_steps": 100})])
+    assert main([cur_p, "--baseline", base_p]) == 0
+    write_bench_json(cur_p, [bench_row("c", "lfvt", "kernel",
+                                       {"walk_steps": 200})])
+    assert main([cur_p, "--baseline", base_p]) == 1
+    # looser threshold lets the same diff through
+    assert main([cur_p, "--baseline", base_p, "--threshold", "1.5"]) == 0

@@ -1,4 +1,5 @@
-"""Flat-array LFVT structural-invariant + encoder-fuzz suites (ISSUE 4).
+"""Flat-array LFVT structural-invariant + encoder-fuzz suites (ISSUE 4),
+plus the walk-kernel parity suite (ISSUE 5).
 
 Locks down ``core/lfvt_flat.py``:
 
@@ -7,7 +8,8 @@ Locks down ``core/lfvt_flat.py``:
     hypothesis-randomized over duplicate/empty/Zipf-skewed collections;
   * array-schema invariants: Σ node seq lengths == FVT node count, owner
     CSR rows sorted + duplicate-free, child/parent consistency, walk
-    rows strictly decreasing;
+    rows strictly decreasing, the fused ``seq_next`` hop column
+    replaying every walk;
   * FVT-vs-LFVT encoding parity: both trees flatten to identical walks;
   * encoder edge cases: empty collections, single-element sets, maximal
     path compression, unused element ids;
@@ -16,6 +18,17 @@ Locks down ``core/lfvt_flat.py``:
   * cache plumbing: ``SetCollection.flat_lfvt`` memoization +
     write-protection, ``to_device`` single upload, the tile_join S-rep
     cache, and the mesh rejection of the MR path.
+
+And ``kernels/lfvt_walk.py`` (DESIGN.md §10):
+
+  * interpret-mode Pallas kernel vs compiled jnp twin vs the PR-4 jnp
+    walk (``lfvt_ref``) vs the host brute-force oracle — 4 measures x
+    thresholds including the exact-boundary 2/3, over duplicate-heavy,
+    empty-set and Zipf-skewed inputs;
+  * the pinned Theorem-3.3 window early stop (``early_stops > 0`` and
+    the while_loop exiting before ``max|seq|`` on a windowed case);
+  * live row-tile skipping, the row-sort ``row_map`` remap under the
+    capacity-regrow protocol, and the driver/MR stats mirrors.
 """
 import numpy as np
 import pytest
@@ -127,6 +140,18 @@ def test_structural_invariants(seed, skew):
                 for sid, _ in flat.walk(a)]
         assert all(r1 > r2 for r1, r2 in zip(rows, rows[1:]))
     assert flat.max_seq_len == int(flat.entry_len.max(initial=0))
+    # the fused seq_next hop column replays every walk: following it from
+    # L(a) for |seq(a)| steps visits exactly the walk's seq_row positions
+    for a in map(int, flat.entry_elem):
+        nid, off, sl = flat.entry_of(a)
+        pos = int(flat.node_seq_off[nid]) + off
+        rows = []
+        for _ in range(sl):
+            rows.append(int(flat.seq_row[pos]))
+            pos = int(flat.seq_next[pos])
+        assert pos == -1  # the hop chain ends exactly at the root
+        assert [int(flat.s_ids[r]) for r in rows] == [
+            sid for sid, _ in flat.walk(a)]
 
 
 @pytest.mark.parametrize("seed", [0, 3, 11])
@@ -325,3 +350,230 @@ def test_unknown_method_still_raises():
     S = random_collection(2, n=4)
     with pytest.raises(ValueError, match="unknown method"):
         cf_rs_join_device(R, S, 0.5, method="lfvt_flat")
+
+
+# ---------------------------------------------------------------------- #
+# walk kernel (kernels/lfvt_walk.py, DESIGN.md §10): parity + early stop
+# ---------------------------------------------------------------------- #
+def near_dup_pair(seed, n=18, universe=64, max_size=14, skew=False,
+                  empty_frac=0.1):
+    """(R, S) with engineered near-duplicates so pairs actually qualify
+    at high thresholds (plus raw duplicates/empties/optional Zipf)."""
+    rng = np.random.default_rng(seed)
+    S = random_collection(seed, n=n, universe=universe, max_size=max_size,
+                          skew=skew, empty_frac=empty_frac)
+    rsets = []
+    for b in S.sets:
+        if rng.random() < 0.5 and len(b) > 1:
+            rsets.append(np.delete(b, rng.integers(len(b))))
+        elif rng.random() < 0.3:
+            rsets.append(np.array(b))  # exact duplicate
+        else:
+            size = int(rng.integers(0, max_size + 1))
+            rsets.append(rng.integers(0, universe, size=size))
+    return SetCollection.from_ragged(rsets, universe=universe), S
+
+
+def _pairs_of(R, flat, packed, n_pairs):
+    got = np.asarray(packed[:n_pairs])
+    return {(int(R.ids[i]), int(flat.s_ids[j])) for i, j in got}
+
+
+@pytest.mark.parametrize("measure,t", [
+    ("jaccard", 0.5), ("jaccard", 2 / 3), ("cosine", 0.7),
+    ("dice", 2 / 3), ("overlap", 0.5), ("jaccard", 0.9)])
+def test_walk_kernel_parity_all_measures(measure, t):
+    """Pallas-interpret kernel == compiled jnp twin == PR-4 jnp walk ==
+    brute force, masks and stats bitwise, per measure and threshold
+    (including the exact-boundary 2/3 the float32 predicate misses)."""
+    from repro.core.join import brute_force_join as bf
+    from repro.kernels import ops as kops
+    R, S = near_dup_pair(31, skew=True)
+    oracle = bf(R, S, t, measure=measure)
+    Ss = S.sort_by_size()
+    flat = Ss.flat_lfvt()
+    r_pad, r_sz = R.padded()
+    lo, hi = window_bounds(r_sz, flat.s_sizes, t, measure)
+    results = {}
+    for impl in ("pallas", "jnp"):
+        stats: dict = {}
+        p, n = kops.lfvt_walk_join_pairs(flat, r_pad, r_sz, lo, hi, t,
+                                         measure=measure, impl=impl,
+                                         stats=stats)
+        assert _pairs_of(R, flat, p, n) == oracle, (measure, t, impl)
+        results[impl] = (n, stats)
+    # the Mosaic body and its jnp twin are the same tiled schedule:
+    # identical pair counts, walk steps, early stops and live tiles
+    assert results["pallas"][0] == results["jnp"][0]
+    for key in ("walk_steps", "early_stops", "live_tiles"):
+        assert results["pallas"][1][key] == results["jnp"][1][key], key
+    p, n = kops.lfvt_join_pairs(flat, np.asarray(r_pad), r_sz, lo, hi, t,
+                                measure=measure)
+    assert _pairs_of(R, flat, p, n) == oracle  # lfvt_ref fallback agrees
+
+
+@pytest.mark.parametrize("case", ["empty_r", "empty_s", "all_empty_sets",
+                                  "zipf_dups"])
+def test_walk_kernel_degenerate_inputs(case):
+    from repro.core.join import brute_force_join as bf
+    from repro.kernels import ops as kops
+    if case == "empty_r":
+        R = SetCollection.from_ragged([], universe=32)
+        S = random_collection(3, n=8, universe=32)
+    elif case == "empty_s":
+        R = random_collection(4, n=8, universe=32)
+        S = SetCollection.from_ragged([], universe=32)
+    elif case == "all_empty_sets":
+        R = SetCollection.from_ragged([np.zeros(0, np.int32)] * 4,
+                                      universe=16)
+        S = random_collection(5, n=6, universe=16)
+    else:
+        R, S = near_dup_pair(17, skew=True, empty_frac=0.3)
+    t = 0.5
+    oracle = bf(R, S, t)
+    for method in ("lfvt", "lfvt_ref"):
+        assert cf_rs_join_device(R, S, t, method=method) == oracle, (
+            case, method)
+    if len(R) and len(S):
+        Ss = S.sort_by_size()
+        flat = Ss.flat_lfvt()
+        r_pad, r_sz = R.padded()
+        lo, hi = window_bounds(r_sz, flat.s_sizes, t)
+        for impl in ("pallas", "jnp"):
+            p, n = kops.lfvt_walk_join_pairs(flat, r_pad, r_sz, lo, hi, t,
+                                             impl=impl)
+            assert _pairs_of(R, flat, p, n) == oracle, (case, impl)
+
+
+def test_walk_kernel_early_stop_pinned():
+    """Pinned Theorem-3.3 window case: a small R set against a shared
+    element whose seq spans sets far outside the window. The lane must
+    stop the moment its walk row leaves [lo, hi) — early_stops > 0 and
+    the while_loop exits well before max|seq| steps."""
+    from repro.kernels import ops as kops
+    K = 16
+    S = SetCollection.from_ragged(
+        [np.arange(i + 1) for i in range(K)], universe=K + 4)  # sizes 1..K
+    R = SetCollection.from_ragged([np.array([0, 1])], universe=K + 4)
+    t = 0.5  # jaccard window for |R|=2: sizes [1, 4] only
+    Ss = S.sort_by_size()
+    flat = Ss.flat_lfvt()
+    assert flat.max_seq_len == K  # element 0 lives in every set
+    r_pad, r_sz = R.padded()
+    lo, hi = window_bounds(r_sz, flat.s_sizes, t)
+    for impl in ("pallas", "jnp"):
+        stats: dict = {}
+        p, n = kops.lfvt_walk_join_pairs(flat, r_pad, r_sz, lo, hi, t,
+                                         impl=impl, stats=stats)
+        from repro.core.join import brute_force_join as bf
+        assert _pairs_of(R, flat, p, n) == bf(R, S, t)
+        assert stats["early_stops"] > 0, impl
+        # dead walk rows cost nothing: the walk ends at the window exit,
+        # not at the global worst-case step count
+        assert 0 < stats["walk_steps"] < flat.max_seq_len, impl
+
+
+def test_walk_kernel_live_row_tiles_skipped():
+    """Rows whose size windows exclude every S column never launch: after
+    the size sort they cluster into row tiles that drop out of the grid."""
+    from repro.core.join import brute_force_join as bf
+    rng = np.random.default_rng(2)
+    # 16 big R sets with live windows + 16 singletons with empty windows
+    big = [rng.permutation(64)[:12] for _ in range(16)]
+    tiny = [np.array([int(rng.integers(64))]) for _ in range(16)]
+    R = SetCollection.from_ragged(big + tiny, universe=64)
+    S = SetCollection.from_ragged(
+        [rng.permutation(64)[:12] for _ in range(12)], universe=64)
+    t = 0.6  # jaccard window of a singleton: sizes [1, 1] — no S set
+    assert all(s >= 8 for s in S.sizes())
+    stats: dict = {}
+    got = cf_rs_join_device(R, S, t, method="lfvt", stats=stats)
+    assert got == bf(R, S, t)
+    assert 0 < stats["live_tiles"] < stats["total_tiles"]
+
+
+def test_walk_kernel_regrow_and_row_map():
+    """Tiny capacity hint forces the power-of-two regrow; the packed rows
+    must come back in original (pre-size-sort) R row order."""
+    from repro.core.join import brute_force_join as bf
+    from repro.kernels import ops as kops
+    R, S = near_dup_pair(23)
+    t = 0.5
+    oracle = bf(R, S, t)
+    assert len(oracle) > 1
+    Ss = S.sort_by_size()
+    flat = Ss.flat_lfvt()
+    r_pad, r_sz = R.padded()
+    lo, hi = window_bounds(r_sz, flat.s_sizes, t)
+    stats: dict = {}
+    p, n = kops.lfvt_walk_join_pairs(flat, r_pad, r_sz, lo, hi, t,
+                                     capacity=1, stats=stats, impl="jnp")
+    assert _pairs_of(R, flat, p, n) == oracle
+    assert np.asarray(p).shape[0] >= n
+    assert (np.asarray(p)[n:] == -1).all()  # capacity padding intact
+    # the driver-level regrow protocol also survives the row remap
+    st2: dict = {}
+    got = cf_rs_join_device(R, S, t, method="lfvt", stats=st2,
+                            pair_capacity=1, r_block=7)
+    assert got == oracle
+    assert st2["walk_steps"] > 0
+
+
+def test_walk_kernel_driver_stats_and_mr_parity():
+    from repro.core.distributed import mr_cf_rs_join
+    from repro.core.join import brute_force_join as bf
+    R, S = near_dup_pair(41, skew=True)
+    t = 2 / 3
+    oracle = bf(R, S, t)
+    st_k: dict = {}
+    st_r: dict = {}
+    assert cf_rs_join_device(R, S, t, method="lfvt", stats=st_k) == oracle
+    assert cf_rs_join_device(R, S, t, method="lfvt_ref",
+                             stats=st_r) == oracle
+    for key in ("walk_steps", "early_stops", "live_tiles", "total_tiles",
+                "s_flat_bytes"):
+        assert key in st_k, key
+    assert "walk_steps" not in st_r  # the ref path reports no walk stats
+    mr_k: dict = {}
+    mr_r: dict = {}
+    assert mr_cf_rs_join(R, S, t, 3, method="lfvt", stats=mr_k) == oracle
+    assert mr_cf_rs_join(R, S, t, 3, method="lfvt_ref",
+                         stats=mr_r) == oracle
+    assert mr_k["walk_steps"] > 0 and mr_k["result_pairs"] == len(oracle)
+    assert mr_r["walk_steps"] == 0  # ref shards emit no walk counters
+
+
+def test_mr_lfvt_ref_also_requires_loop_path():
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.distributed import mr_cf_rs_join
+    R = random_collection(1, n=6)
+    S = random_collection(2, n=6)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    with pytest.raises(ValueError, match="loop path"):
+        mr_cf_rs_join(R, S, 0.5, 1, method="lfvt_ref", mesh=mesh)
+
+
+def test_walk_kernel_smem_prefetch_budget():
+    """The auto dispatch must drop to the compiled twin once the
+    scalar-prefetch working set (lane arrays + seq columns) outgrows the
+    SMEM budget, instead of failing Mosaic allocation on hardware."""
+    from repro.kernels.lfvt_walk import (SMEM_PREFETCH_BUDGET,
+                                         prefetch_fits_smem)
+    assert prefetch_fits_smem(1024, 32, 10_000)
+    # 2*(Mp*Lr) + 2*T int32s just over / under the budget
+    words = SMEM_PREFETCH_BUDGET // 4
+    assert prefetch_fits_smem(1, 1, (words - 2) // 2)
+    assert not prefetch_fits_smem(1, 1, words // 2)
+    assert not prefetch_fits_smem(words, 1, 0)
+
+
+def test_walk_kernel_unknown_impl_raises():
+    from repro.kernels import ops as kops
+    R, S = near_dup_pair(3)
+    flat = S.sort_by_size().flat_lfvt()
+    r_pad, r_sz = R.padded()
+    lo, hi = window_bounds(r_sz, flat.s_sizes, 0.5)
+    with pytest.raises(ValueError, match="unknown lfvt walk impl"):
+        kops.lfvt_walk_join_pairs(flat, r_pad, r_sz, lo, hi, 0.5,
+                                  impl="mosaic")
