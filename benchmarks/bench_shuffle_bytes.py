@@ -13,17 +13,22 @@ global-max vs bucketed shard packing (reduce bytes, peak resident mask,
 padding waste).
 
 CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]
-[--append] [--measure jaccard cosine ... | all]`` — ``--smoke`` runs a
-tiny single-dataset sweep (CI); ``--out`` writes the consolidated
-``{config, method, impl, metrics}`` row artifact (``--append`` extends
-an existing one, so this bench and bench_kernels share one
-BENCH_pr5.json); ``--measure`` adds the similarity-measure axis (per-
-measure windows change R replication, shard loads and result density —
-DESIGN.md §8).
+[--append] [--measure jaccard cosine ... | all] [--method fvt|lfvt]`` —
+``--smoke`` runs a tiny single-dataset sweep (CI); ``--out`` writes the
+consolidated ``{config, method, impl, metrics}`` row artifact
+(``--append`` extends an existing one, so this bench and bench_kernels
+share one BENCH_pr6.json); ``--measure`` adds the similarity-measure
+axis (per-measure windows change R replication, shard loads and result
+density — DESIGN.md §8); ``--method lfvt`` runs the mesh-vs-loop LFVT
+sweep instead (one shard per visible device — pair it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` off-TPU) and
+reports wall clocks, ``mesh_vs_loop_ratio``, ``flat_pad_waste`` and the
+mesh reduce bytes (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import itertools
+import time
 
 from repro.core.baselines import fs_join, mr_rp_ppjoin
 from repro.core.distributed import mr_cf_rs_join
@@ -127,7 +132,79 @@ def skew_sweep(smoke: bool = False, measures=("jaccard",)) -> dict:
     return out
 
 
-def main(smoke: bool = False, measures=("jaccard",)) -> dict:
+def lfvt_mesh_sweep(smoke: bool = False, measures=("jaccard",)) -> dict:
+    """Mesh-vs-loop LFVT: the distributed method='lfvt' path (bucketed
+    flat-array padding + shard_map, DESIGN.md §11) against the
+    sequential loop path on the same Zipf-skewed workload.
+
+    One shard per visible device; both paths are warmed (compiled) once
+    and the second run is timed. Reports wall clocks and their ratio,
+    the sentinel-padding waste of the bucketed flat tables, walk-counter
+    parity and the mesh reduce bytes.
+    """
+    import jax
+
+    out = {}
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    n = 160 if smoke else 1200
+    universe = (1 << 14) if smoke else (1 << 21)
+    # cap the Zipf tail: the padded R layout is (m, max|r|) and the walk
+    # runs every R element, so the skew shows up in shard loads without
+    # a single half-million-element set dominating the rectangle; skew
+    # element popularity too, else a 2^21 universe never collides and
+    # every walk dies at its entry row
+    R, S = make_skew_dataset(n, universe, a=1.4, seed=11,
+                             max_len=48 if smoke else 96, element_a=1.25)
+    t = 0.5
+    for measure in measures:
+        key = ("lfvt_mesh" if measure == "jaccard"
+               else f"lfvt_mesh/{measure}")
+
+        def run(**kw):
+            st: dict = {}
+            mr_cf_rs_join(R, S, t, n_dev, method="lfvt", measure=measure,
+                          strategy="load_aware", **kw)  # warm / compile
+            t0 = time.perf_counter()
+            pairs = mr_cf_rs_join(R, S, t, n_dev, method="lfvt",
+                                  measure=measure, strategy="load_aware",
+                                  stats=st, **kw)
+            return pairs, time.perf_counter() - t0, st
+
+        loop_pairs, loop_s, _ = run()
+        mesh_pairs, mesh_s, ms = run(mesh=mesh, pad="bucket")
+        assert mesh_pairs == loop_pairs, key  # parity is part of the bench
+        ratio = mesh_s / max(loop_s, 1e-9)
+        emit(f"lfvt/{key}", mesh_s,
+             f"loop_s={loop_s:.3f}"
+             f";ratio={ratio:.3f}"
+             f";pairs={len(mesh_pairs)}"
+             f";flat_pad_waste={ms['flat_pad_waste']:.3f}"
+             f";walk_steps={ms['walk_steps']}"
+             f";reduce_bytes={ms['reduce_bytes']}"
+             f";devices={n_dev};buckets={ms['n_buckets']}")
+        out[("lfvt_mesh", key)] = {
+            "result_pairs": len(mesh_pairs),
+            "loop_seconds": loop_s,
+            "mesh_seconds": mesh_s,
+            "mesh_vs_loop_ratio": ratio,
+            "flat_pad_waste": ms["flat_pad_waste"],
+            "pad_waste_mean": ms["pad_waste_mean"],
+            "pad_waste_max": ms["pad_waste_max"],
+            "walk_steps": ms["walk_steps"],
+            "early_stops": ms["early_stops"],
+            "reduce_bytes_mesh": ms["reduce_bytes"],
+            "shard_block_bytes": ms["shard_block_bytes"],
+            "mesh_devices": n_dev,
+            "n_buckets": ms["n_buckets"],
+        }
+    return out
+
+
+def main(smoke: bool = False, measures=("jaccard",),
+         method: str = "fvt") -> dict:
+    if method == "lfvt":
+        return lfvt_mesh_sweep(smoke, measures)
     out = table3_sweep(smoke, measures)
     out.update(skew_sweep(smoke, measures))
     return out
@@ -149,12 +226,16 @@ if __name__ == "__main__":
     ap.add_argument("--measure", nargs="+", default=["jaccard"],
                     choices=list(measure_names()) + ["all"],
                     help="similarity-measure axis (or 'all')")
+    ap.add_argument("--method", default="fvt", choices=("fvt", "lfvt"),
+                    help="fvt: shuffle/skew sweeps (default); lfvt: the "
+                         "mesh-vs-loop distributed LFVT sweep")
     args = ap.parse_args()
     ms = (measure_names() if "all" in args.measure
           else tuple(args.measure))
-    res = main(smoke=args.smoke, measures=ms)
+    res = main(smoke=args.smoke, measures=ms, method=args.method)
     if args.out:
         suffix = "[smoke]" if args.smoke else ""
-        rows = [bench_row("/".join(map(str, k)) + suffix, "mr", "jnp", v)
+        impl = "mesh" if args.method == "lfvt" else "jnp"
+        rows = [bench_row("/".join(map(str, k)) + suffix, "mr", impl, v)
                 for k, v in res.items()]
         write_bench_json(args.out, rows, append=args.append)

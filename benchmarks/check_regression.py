@@ -1,6 +1,6 @@
 """CI bench-regression gate: diff two consolidated BENCH artifacts.
 
-Compares the current (smoke-run) ``BENCH_pr5.json`` against the
+Compares the current (smoke-run) ``BENCH_pr6.json`` against the
 committed baseline row-by-row — rows are keyed ``(config, method,
 impl)`` — and fails (exit 1) when any **tracked** metric regresses by
 more than ``--threshold`` (default 25%). Tracked metrics are
@@ -10,12 +10,13 @@ lower-is-better:
     ``s_flat_bytes``, ``walk_steps``, ...) — compared strictly; these
     move only when someone changes the algorithm, so a >25% jump is a
     real regression;
-  * the timing ratio ``kernel_vs_ref_walk_ratio`` (kernel seconds / ref
-    seconds for the LFVT walk) — compared with a noise floor: shared CI
-    runners jitter wall clocks, so the gate only fails when the ratio
-    is both >25% over baseline *and* above ``RATIO_NOISE_FLOOR`` (the
-    kernel actually lost to the jnp walk by a margin noise cannot
-    explain).
+  * the timing ratios ``kernel_vs_ref_walk_ratio`` (kernel seconds /
+    ref seconds for the LFVT walk) and ``mesh_vs_loop_ratio``
+    (distributed LFVT mesh seconds / loop-path seconds) — compared with
+    a noise floor: shared CI runners jitter wall clocks, so the gate
+    only fails when the ratio is both >25% over baseline *and* above
+    ``RATIO_NOISE_FLOOR`` (the contender actually lost by a margin
+    noise cannot explain).
 
 Rows present on only one side are reported but never fail the gate
 (configs come and go with sweep changes); a missing tracked metric on
@@ -40,6 +41,9 @@ TRACKED_METRICS = (
     "s_rep_bytes",              # per-method S-side representation
     "walk_steps",               # executed lockstep walk steps
     "kernel_vs_ref_walk_ratio",  # LFVT walk kernel vs jnp-walk seconds
+    "flat_pad_waste",           # bucketed flat-table sentinel padding
+    "reduce_bytes_mesh",        # mesh-path compacted reduce output
+    "mesh_vs_loop_ratio",       # distributed LFVT vs loop-path seconds
 )
 # wall-clock ratios only fail above this absolute value: below it the
 # kernel still beats (or matches) the reference within runner noise

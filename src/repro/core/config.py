@@ -1,0 +1,85 @@
+"""Global configuration for the join stack (alpa-style, SNIPPETS.md §3).
+
+PR 6 threads one more execution axis (the mesh LFVT path) through the
+driver stack, and with it the block/tile/budget/pad knobs that used to
+live as per-module constants and per-function kwarg defaults stopped
+being discoverable. This module consolidates them: one plain
+``GlobalConfig`` object, grouped by subsystem, with environment-variable
+overrides (``REPRO_<FIELD>``) applied at import so CI cells and bench
+sweeps can retune without code edits.
+
+Call sites read ``global_config`` at *call time* (``arg or
+global_config.x`` / ``if arg is None``), so mutating the singleton mid
+process — the test pattern — takes effect on the next call, no reload
+needed. The historical module constants (``lfvt_walk.DEFAULT_ROW_TILE``,
+``tile_join.PAIR_CAP_GRAIN``, …) remain as import-time aliases for
+backwards compatibility; the config is the source of truth.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["GlobalConfig", "global_config"]
+
+
+class GlobalConfig:
+    """Namespace of the join stack's tuning knobs (one mutable singleton)."""
+
+    def __init__(self):
+        ########## walk kernel (kernels/lfvt_walk.py) ##########
+        # rows per grid step of the live row-tiled walk (multiple of the
+        # int32 sublane 8); one hot element serializes its tile, not the
+        # block
+        self.row_tile = 16
+        # lane (last-dim) padding multiple for count tiles / S-size rows
+        self.col_pad = 128
+        # VMEM budget the per-grid-step walk working set is accounted
+        # against (lane tiles + seq/nxt rows + count tile; ~16 MB/core on
+        # current TPUs). Advisory: drivers report the accounting in stats
+        # (`walk_vmem_tile_bytes`), they no longer fall back on overflow
+        # the way the removed SMEM prefetch budget forced them to.
+        self.vmem_budget = 16 * 2 ** 20
+
+        ########## pair emission (core/tile_join.py, kernels/ops.py) ##########
+        # capacity grain of the power-of-two pair-buffer regrow protocol
+        self.pair_cap_grain = 128
+
+        ########## single-device driver (core/tile_join.py) ##########
+        self.r_block = 1024
+        self.double_buffer = True
+
+        ########## distributed path (core/distributed.py) ##########
+        # default mesh axis name for shard_map reduces
+        self.mesh_axis = "data"
+        # default shard padding mode: 'auto' resolves per path (bucket on
+        # the loop + mesh-lfvt paths, global for stacked bitmap shard_map)
+        self.pad_mode = "auto"
+        # sentinel element id for padded FlatLFVT entry rows: int32 max
+        # keeps the entry table sorted and can never equal a real element
+        # (element ids are < universe <= 2**31 - 1)
+        self.flat_pad_sentinel = 2 ** 31 - 1
+
+        self.update_from_env()
+
+    def update_from_env(self, prefix: str = "REPRO_") -> None:
+        """Override int/bool/str fields from ``<prefix><FIELD>`` env vars."""
+        for name, cur in vars(self).items():
+            raw = os.environ.get(prefix + name.upper())
+            if raw is None:
+                continue
+            if isinstance(cur, bool):
+                setattr(self, name, raw.lower() in ("1", "true", "yes", "on"))
+            elif isinstance(cur, int):
+                setattr(self, name, int(raw))
+            else:
+                setattr(self, name, raw)
+
+    def snapshot(self) -> dict:
+        """Plain-dict view (bench metadata / test save-restore)."""
+        return dict(vars(self))
+
+    def restore(self, snap: dict) -> None:
+        vars(self).update(snap)
+
+
+global_config = GlobalConfig()

@@ -35,6 +35,7 @@ try:  # jax >= 0.5 re-exports shard_map at top level
 except ImportError:  # pragma: no cover - older jax
     from jax.experimental.shard_map import shard_map
 
+from .config import global_config
 from .measures import get_measure
 from .partition import Partitioning, hash_partition, load_aware_partition, route
 from .sets import SetCollection
@@ -407,23 +408,21 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
     The map side routes rows exactly like the bitmap paths, but each
     shard's S partition is compiled to a ``FlatLFVT`` on the host and
     shipped as plain int32 ndarrays — reducers never rebuild pointer
-    trees, and nothing |S|·W-shaped is ever materialized (the per-shard
-    arrays are ragged, which is why this path is loop-only). Shards
+    trees, and nothing |S|·W-shaped is ever materialized. Shards
     stream double-buffered: shard k+1's walk is dispatched before shard
     k's pair count syncs. ``impl='kernel'`` (method='lfvt') runs each
-    shard's emit='pairs' reduce through the live row-tiled walk kernel
-    dispatch (DESIGN.md §10) and mirrors its walk_steps/early_stops/
-    live_tiles stats; ``impl='ref'`` (method='lfvt_ref') keeps the PR-4
-    whole-block jnp walk, which the emit='mask' fallback uses for both.
+    shard's reduce (both emit modes) through the live row-tiled walk
+    kernel dispatch (DESIGN.md §10) and mirrors its walk_steps/
+    early_stops/live_tiles stats; ``impl='ref'`` (method='lfvt_ref')
+    keeps the PR-4 whole-block jnp walk.
 
-    Raggedness also means the jitted walk specializes per shard shape
+    Raggedness means the jitted walk specializes per shard shape
     (mb, n, E, T, max|seq| all differ), so every shard pays a trace —
-    acceptable on this CPU-bench path; bucketed padding of the flat
-    arrays (ROADMAP "shard_map for ragged flat arrays") is the known
-    follow-up that would let shards share compiled shapes.
+    acceptable on this CPU-bench path. ``_lfvt_mesh_join`` is the
+    ``shard_map`` counterpart: it sentinel-pads the flat tables into
+    pow-2 buckets so shards share compiled shapes (DESIGN.md §11).
     """
     from repro.kernels import ops as kops
-    from .lfvt_flat import flat_join_mask
 
     s_rows, r_rows, route_stats = route(R, S, part)
     r_sizes = R.sizes()
@@ -431,7 +430,7 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
     pairs: set = set()
     acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
            "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0,
-           "walk_steps": 0, "early_stops": 0, "live": 0}
+           "walk_steps": 0, "early_stops": 0, "live": 0, "walk_vmem": 0}
 
     def dispatch(k: int) -> dict | None:
         rs, ss = r_rows[k], s_rows[k]
@@ -446,16 +445,17 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
         acc["ship"] += flat.nbytes() + r_pad.nbytes + sz.nbytes
         acc["dense"] += len(rs) * len(ss)
         acc["shards"] += 1
+        # both emit modes share the same dispatch (the walk kernel for
+        # 'lfvt', the whole-block jnp walk for 'lfvt_ref'); emit='mask'
+        # is resolved by ``join_mask_finalize`` instead of compaction
         ctx = {"rs": rs, "flat": flat}
-        if emit == "pairs" and impl == "ref":
+        if impl == "ref":
             ctx["pending"] = kops.lfvt_join_pairs_dispatch(
                 flat, jnp.asarray(r_pad), jnp.asarray(sz), jnp.asarray(lo),
                 jnp.asarray(hi), t, measure=measure)
-        elif emit == "pairs":
+        else:
             ctx["pending"] = kops.lfvt_walk_join_pairs_dispatch(
                 flat, r_pad, sz, lo, hi, t, measure=measure)
-        else:
-            ctx["mask"] = flat_join_mask(flat, r_pad, sz, lo, hi, t, measure)
         return ctx
 
     def finalize(ctx: dict) -> None:
@@ -471,12 +471,21 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
             acc["walk_steps"] += kstats.get("walk_steps", 0)
             acc["early_stops"] += kstats.get("early_stops", 0)
             acc["live"] += kstats.get("live_tiles", 0)
+            acc["walk_vmem"] = max(acc["walk_vmem"],
+                                   kstats.get("walk_vmem_tile_bytes", 0))
             mask_cells = len(rs) * flat.n_sets
             acc["peak_mask"] = max(acc["peak_mask"], mask_cells)
             acc["peak_inter"] = max(
                 acc["peak_inter"], mask_cells + kstats.get("pair_bytes", 0))
         else:
-            mask = np.asarray(ctx["mask"])
+            kstats = {}
+            mask = kops.join_mask_finalize(
+                ctx["pending"], len(rs), flat.n_sets, kstats)
+            acc["walk_steps"] += kstats.get("walk_steps", 0)
+            acc["early_stops"] += kstats.get("early_stops", 0)
+            acc["live"] += kstats.get("live_tiles", 0)
+            acc["walk_vmem"] = max(acc["walk_vmem"],
+                                   kstats.get("walk_vmem_tile_bytes", 0))
             rr, cc = np.nonzero(mask)
             local = (np.stack([rr, cc], axis=1) if len(rr)
                      else np.zeros((0, 2), np.int64))
@@ -511,10 +520,327 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
             reduce_mask_peak_bytes=acc["peak_mask"],
             walk_steps=acc["walk_steps"], early_stops=acc["early_stops"],
             live_tiles=acc["live"],
+            walk_vmem_tile_bytes=acc["walk_vmem"],
             regrows=acc["regrows"], pad="ragged", n_buckets=acc["shards"],
             shard_block_bytes=acc["ship"],
             shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
             pad_waste_max=0.0, pad_waste_mean=0.0)
+    return pairs
+
+
+# ---------------------------------------------------------------------- #
+# reduce phase — mesh flat-LFVT path (method='lfvt' under shard_map,
+# DESIGN.md §11): bucketed pow-2 sentinel padding makes the per-shard
+# flat tables rectangular, so shard_map can stack them
+# ---------------------------------------------------------------------- #
+def _lfvt_local_mask(entry_elem, entry_pos, entry_len, seq, nxt, s_sizes,
+                     r_padded, r_sizes, lo, hi, *, t: float, measure: str,
+                     max_steps: int, tm: int):
+    """One shard's flat-LFVT walk + qualify, traceable under shard_map.
+
+    The shard-local compute of the mesh path: lane prep mirrors the
+    kernel driver's ``entry_state`` (sparse binary-search entry lookup,
+    lanes sorted by remaining walk length), then the shard runs the
+    compiled jnp twin ``lfvt_walk_live_tiled_ref`` over a *static
+    all-tiles* schedule — host-side live-tile planning can't run inside
+    a traced shard body, so the mesh path trades tile skipping for
+    shared compiled shapes across the bucket, while keeping the twin's
+    live-lane staircase (scatter traffic tracks live lanes instead of
+    Lr x max|seq|, which is what makes the shard-local walk competitive
+    with the loop path's planned launches). Entry rows arrive
+    pre-resolved to absolute walk positions
+    (``lfvt_flat.entry_positions``), so the node table never ships.
+    Sentinel rows (padded entries/seq/sets) are unreachable: pad
+    entries have ``entry_len`` 0, no real hop chain points past the
+    original T, and padded S columns have size 0 — outside every window
+    and failing the f > 0 predicate.
+
+    Returns (mask (mp, n) bool, walk_steps, early_stops — scalars; the
+    counters are per-tile sums, same semantics as the kernel stats).
+    """
+    from repro.kernels import lfvt_walk as _lw  # lazy: mirrors kops
+
+    mp, _ = r_padded.shape
+    E = entry_elem.shape[0]
+    idx = jnp.minimum(jnp.searchsorted(entry_elem, r_padded), E - 1)
+    present = (r_padded >= 0) & (entry_elem[idx] == r_padded)
+    pos = jnp.where(present, entry_pos[idx], 0).astype(jnp.int32)
+    rem = jnp.where(present, entry_len[idx], 0).astype(jnp.int32)
+    order = jnp.argsort(-rem, axis=1)
+    lane_pos = jnp.take_along_axis(pos, order, axis=1)
+    lane_rem = jnp.take_along_axis(rem, order, axis=1)
+    ti = jnp.arange(mp // tm, dtype=jnp.int32)
+    masks, _, steps, stops = _lw.lfvt_walk_live_tiled_ref(
+        ti, lane_pos, lane_rem, nxt.reshape(1, -1), seq.reshape(1, -1),
+        s_sizes.astype(jnp.int32).reshape(1, -1),
+        r_sizes.astype(jnp.int32).reshape(-1, 1),
+        lo.astype(jnp.int32).reshape(-1, 1),
+        hi.astype(jnp.int32).reshape(-1, 1),
+        t=t, measure=measure, max_steps=max_steps, tm=tm)
+    return (masks.reshape(mp, -1),
+            jnp.sum(steps, dtype=jnp.int32),
+            jnp.sum(stops, dtype=jnp.int32))
+
+
+@functools.lru_cache(maxsize=16)
+def _lfvt_submesh(mesh: Mesh, axis: str, k: int) -> Mesh:
+    """First-k-devices submesh for a bucket of k shards (cached so Mesh
+    identity — and with it the jit cache — is stable across calls)."""
+    if tuple(mesh.axis_names) == (axis,) and mesh.shape[axis] == k:
+        return mesh
+    return Mesh(mesh.devices.reshape(-1)[:k], (axis,))
+
+
+@functools.lru_cache(maxsize=64)
+def _lfvt_walk_fn(mesh: Mesh, axis: str, t: float, measure: str,
+                  max_steps: int, tm: int):
+    """Jitted shard_map flat-LFVT walk for one bucket shape family.
+
+    Returns per-shard (mask, steps, stops), all P(axis)-sharded — the
+    mask stays device-resident so the compact stage (and its regrow
+    retries) never replays the walk. Cached per (mesh, axis, t,
+    measure, max_steps, tm) so repeated joins reuse the compiled
+    executable; the inner jit specializes per stacked-array shape (one
+    trace per bucket footprint, shared by every shard in the bucket —
+    the point of the pow-2 padding)."""
+    spec = P(axis)
+
+    def body(ee, ep, el, seq, nxt, ssz, rpad, rsz, lo, hi):
+        mask, steps, stops = _lfvt_local_mask(
+            ee[0], ep[0], el[0], seq[0], nxt[0], ssz[0], rpad[0], rsz[0],
+            lo[0], hi[0], t=t, measure=measure, max_steps=max_steps,
+            tm=tm)
+        return mask[None], steps.reshape(1), stops.reshape(1)
+
+    # check_rep=False: the walk's while_loop has no replication rule on
+    # jax 0.4.x; every output is per-shard anyway (nothing replicated)
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,) * 10,
+                             out_specs=(spec,) * 3, check_rep=False))
+
+
+@functools.lru_cache(maxsize=64)
+def _lfvt_compact_fn(mesh: Mesh, axis: str, cap: int):
+    """Jitted shard_map in-shard pair compaction over a device-resident
+    mask stack (PR-2 fixed-cap protocol; on overflow the caller calls
+    again with a bigger cap — compute-only, the walk is not re-run)."""
+    spec = P(axis)
+
+    def body(mask):
+        pairs, count = _shard_pairs_body(mask[0], cap)
+        return pairs[None], count.reshape(1)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                             out_specs=(spec,) * 2, check_rep=False))
+
+
+def _lfvt_bucket_arrays(bucket, caps, Lr, r_pad_all, r_sizes_all, R_ids,
+                        t: float, measure: str):
+    """Stack one bucket's shards into rectangular sentinel-padded arrays.
+
+    ``bucket`` is [(shard_id, FlatLFVT, r_row_indices, max|r|)]; ``caps``
+    the bucket maxima (mp, np_, Ep, Tp, max_steps) and ``Lr`` the bucket
+    lane width (max|r| over the bucket — R rows are sliced to it, which
+    only drops -1 pad columns). Returns (device operand tuple, r_ids
+    (K, mp), s_ids (K, np_), used/alloc int32 cell counts per shard for
+    the pad-waste stats).
+    """
+    from .lfvt_flat import entry_positions, pad_flat_tables
+
+    mp, np_, Ep, Tp, _ = caps
+    K = len(bucket)
+    ee = np.full((K, Ep), global_config.flat_pad_sentinel, np.int32)
+    epos = np.zeros((K, Ep), np.int32)
+    elen = np.zeros((K, Ep), np.int32)
+    seq = np.zeros((K, Tp), np.int32)
+    nxt = np.full((K, Tp), -1, np.int32)
+    ssz = np.zeros((K, np_), np.int32)
+    s_ids = np.full((K, np_), -1, np.int64)
+    rpad = np.full((K, mp, Lr), -1, np.int32)
+    rsz = np.zeros((K, mp), np.int32)
+    lo = np.zeros((K, mp), np.int32)
+    hi = np.zeros((K, mp), np.int32)
+    r_ids = np.full((K, mp), -1, np.int64)
+    used = np.zeros(K, np.float64)
+    for lk, (_, flat, rs, lr_k) in enumerate(bucket):
+        mk, nk = len(rs), flat.n_sets
+        Ek, Tk = len(flat.entry_elem), len(flat.seq_row)
+        padded = pad_flat_tables(flat, n_entries=Ep, n_seq=Tp, n_sets=np_)
+        ee[lk] = padded.entry_elem
+        epos[lk] = entry_positions(padded)
+        elen[lk] = padded.entry_len
+        seq[lk] = padded.seq_row
+        nxt[lk] = padded.seq_next
+        ssz[lk] = padded.s_sizes
+        s_ids[lk] = padded.s_ids
+        rpad[lk, :mk] = r_pad_all[rs][:, :Lr]
+        rsz[lk, :mk] = r_sizes_all[rs]
+        l, h = window_bounds(r_sizes_all[rs], flat.s_sizes, t, measure)
+        lo[lk, :mk] = l
+        hi[lk, :mk] = h
+        r_ids[lk, :mk] = R_ids[rs]
+        # shipped walk-table cells: R side mk·(max|r|+3) [elements +
+        # size/lo/hi at the shard's own lane width], S side 3·E + 2·T
+        # + n [entry triplet + seq/hop + set sizes]
+        used[lk] = mk * (lr_k + 3) + 3 * Ek + 2 * Tk + nk
+    alloc = float(mp * (Lr + 3) + 3 * Ep + 2 * Tp + np_)
+    arrays = (ee, epos, elen, seq, nxt, ssz, rpad, rsz, lo, hi)
+    return arrays, r_ids, s_ids, used, alloc
+
+
+def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
+                    mesh: Mesh, axis: str, *, emit: str, pad: str,
+                    pair_capacity: int | None, measure: str,
+                    stats: dict | None) -> set:
+    """MR-CF-RS-Join/LFVT under shard_map: the paper's headline method as
+    a real multi-device mesh path (DESIGN.md §11).
+
+    Map phase (host): route rows, compile each shard's S partition to a
+    ``FlatLFVT``, resolve entries to absolute walk positions, then group
+    shards into pow-2 footprint buckets (PR 2's ``ShardBlock`` bucketing
+    extended to the flat node/seq/entry tables) and sentinel-pad each
+    bucket to its own maxima — rectangular arrays that ``shard_map`` can
+    stack, with pad waste reported like PR 2's packing stats.
+
+    Reduce phase (device): one shard_map per bucket over the first
+    ``K_b`` mesh devices; each shard runs the lockstep flat-array walk
+    (``_lfvt_local_mask``) and — for emit='pairs' — the PR-2 in-shard
+    fixed-cap compaction with the power-of-two regrow protocol (upload
+    once, rerun compute-only on overflow). Only (cap, 2) buffers +
+    counts + the walk counters leave a shard.
+    """
+    s_rows, r_rows, route_stats = route(R, S, part)
+    r_sizes_all = R.sizes()
+    r_pad_all, _ = R.padded()
+    Lr = r_pad_all.shape[1] if r_pad_all.ndim == 2 else 0
+    n_devices = mesh.shape[axis]
+
+    shards = []
+    for k in range(part.n_shards):
+        rs, ss = r_rows[k], s_rows[k]
+        if not len(rs) or not len(ss):
+            continue
+        sub = SetCollection([S.sets[int(j)] for j in ss], S.universe,
+                            S.ids[ss].astype(np.int32))
+        shards.append((k, sub.flat_lfvt(), rs))
+
+    # pow-2 bucketing over the flat-table footprint axes (m, n, E, T)
+    # plus the *shard-local* R lane width max|r| — like PR 2 the key
+    # only groups, each bucket pads to its own per-axis maxima, so
+    # bucketed padding never exceeds the global-max packing. Including
+    # the lane width is the big win: load-aware size windows
+    # anti-correlate shard structure (many tiny R sets vs few huge
+    # ones), so per-bucket lane slicing ships (and walks!) max|r|-wide
+    # rows instead of the global Lr — less pad waste *and* fewer dead
+    # scatter lanes per step. pad='global' keeps one all-shards launch
+    # (maximum device parallelism) at the cost of global-cap padding.
+    buckets: dict[tuple, list] = {}
+    for k, flat, rs in shards:
+        lr_k = max(int(r_sizes_all[rs].max(initial=0)), 1)
+        key = (1,) if pad == "global" else (
+            _ceil_pow2(len(rs)), _ceil_pow2(flat.n_sets),
+            _ceil_pow2(max(len(flat.entry_elem), 1)),
+            _ceil_pow2(max(len(flat.seq_row), 1)), _ceil_pow2(lr_k))
+        buckets.setdefault(key, []).append((k, flat, rs, lr_k))
+
+    pairs: set = set()
+    acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
+           "peak_mask": 0, "peak_inter": 0, "ship": 0,
+           "walk_steps": 0, "early_stops": 0, "walk_vmem": 0}
+    waste_parts: list[float] = []
+    cap_hint = pair_capacity if pair_capacity else PAIR_CAP_GRAIN
+    tm = global_config.row_tile
+    for key in sorted(buckets):
+        bucket = buckets[key]
+        K = len(bucket)
+        # mp rounds up to the row-tile multiple: the shard-local walk
+        # runs the tiled twin over a static all-tiles schedule, and the
+        # extra rows are -1-padded with lo = hi = 0 (dead lanes);
+        # lane width slices to the bucket max|r| (columns past a row's
+        # own size are -1 pads, so slicing drops only dead lanes)
+        caps = (-(-max(len(rs) for _, _, rs, _ in bucket) // tm) * tm,
+                max(f.n_sets for _, f, _, _ in bucket),
+                max(max(len(f.entry_elem), 1) for _, f, _, _ in bucket),
+                max(max(len(f.seq_row), 1) for _, f, _, _ in bucket),
+                max(f.max_seq_len for _, f, _, _ in bucket))
+        lr_b = min(max(lr for _, _, _, lr in bucket), Lr) if Lr else 1
+        arrays, r_ids, s_ids, used, alloc = _lfvt_bucket_arrays(
+            bucket, caps, lr_b, r_pad_all, r_sizes_all, R.ids, t, measure)
+        waste_parts.extend(1.0 - used / alloc)
+        acc["ship"] += 4 * K * int(alloc)
+        mp, np_ = caps[0], caps[1]
+        acc["dense"] += K * mp * np_
+        submesh = _lfvt_submesh(mesh, axis, K)
+        spec = P(axis)
+        placed = tuple(
+            jax.device_put(a, NamedSharding(submesh, spec)) for a in arrays)
+        masks_dev, steps_dev, stops_dev = _lfvt_walk_fn(
+            submesh, axis, t, measure, caps[4], tm)(*placed)
+        if emit == "pairs":
+            cap = round_capacity(max(cap_hint, 1))
+            while True:  # PR-2 regrow: exact counts, compact-only rerun
+                pairs_dev, counts_dev = _lfvt_compact_fn(
+                    submesh, axis, cap)(masks_dev)
+                counts = np.asarray(counts_dev).reshape(-1)
+                mx = int(counts.max(initial=0))
+                if mx <= cap:
+                    break
+                cap = round_capacity(mx)
+                acc["regrows"] += 1
+            for lk in range(K):
+                c = int(counts[lk])
+                if c:
+                    local = np.asarray(pairs_dev[lk, :c])
+                    rid = r_ids[lk, local[:, 0]]
+                    sid = s_ids[lk, local[:, 1]]
+                    keep = (rid >= 0) & (sid >= 0)
+                    pairs.update(zip(map(int, rid[keep]),
+                                     map(int, sid[keep])))
+            acc["reduce"] += int(counts.sum()) * 8 + K * 4
+            acc["result"] += int(counts.sum())
+            acc["peak_mask"] = max(acc["peak_mask"], mp * np_)
+            acc["peak_inter"] = max(acc["peak_inter"],
+                                    mp * np_ + K * (cap * 8 + 4))
+        else:
+            masks = np.asarray(masks_dev)
+            for lk in range(K):
+                rr, cc = np.nonzero(masks[lk])
+                pairs.update(
+                    (int(r_ids[lk, i]), int(s_ids[lk, j]))
+                    for i, j in zip(rr, cc)
+                    if r_ids[lk, i] >= 0 and s_ids[lk, j] >= 0)
+            acc["reduce"] += masks.size
+            acc["peak_mask"] = max(acc["peak_mask"], masks.size)
+            acc["peak_inter"] = max(acc["peak_inter"], masks.size)
+        acc["walk_steps"] += int(np.asarray(steps_dev).sum())
+        acc["early_stops"] += int(np.asarray(stops_dev).sum())
+        # advisory §10 per-grid-step residency for this bucket's layout
+        # (the shard body runs the twin, but the accounting is shared)
+        from repro.kernels import lfvt_walk as _lw
+        acc["walk_vmem"] = max(
+            acc["walk_vmem"],
+            _lw.walk_vmem_tile_bytes(tm, lr_b, np_, caps[3]))
+
+    n_result = acc["result"] if emit == "pairs" else len(pairs)
+    if stats is not None:
+        waste = np.asarray(waste_parts, np.float64)
+        stats.update(route_stats)
+        stats.update(
+            intervals=part.intervals, psi=part.psi, n_shards=part.n_shards,
+            emit=emit, measure=measure, result_pairs=n_result,
+            pair_bytes=n_result * 8, reduce_bytes=acc["reduce"],
+            dense_mask_bytes=acc["dense"],
+            reduce_intermediate_peak_bytes=acc["peak_inter"],
+            reduce_mask_peak_bytes=acc["peak_mask"],
+            walk_steps=acc["walk_steps"], early_stops=acc["early_stops"],
+            live_tiles=0,  # the mesh body runs whole shards, not tiles
+            walk_vmem_tile_bytes=acc["walk_vmem"],
+            regrows=acc["regrows"], pad=pad, n_buckets=len(buckets),
+            mesh_devices=n_devices,
+            shard_block_bytes=acc["ship"],
+            shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
+            pad_waste_max=float(waste.max(initial=0.0)),
+            pad_waste_mean=float(waste.mean()) if len(waste) else 0.0,
+            flat_pad_waste=float(waste.mean()) if len(waste) else 0.0)
     return pairs
 
 
@@ -546,8 +872,8 @@ def _collect_block_pairs(block: ShardBlock, pairs_dev,
 def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                   n_shards: int, strategy: str = "load_aware",
                   method: str = "popcount", mesh: Mesh | None = None,
-                  axis: str = "data", stats: dict | None = None,
-                  emit: str = "pairs", pad: str = "auto",
+                  axis: str | None = None, stats: dict | None = None,
+                  emit: str = "pairs", pad: str | None = None,
                   pair_capacity: int | None = None,
                   measure: str = "jaccard") -> set:
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
@@ -555,13 +881,17 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
     method:   'popcount' | 'onehot' | 'kernel_bitmap' | 'kernel_onehot'
               (shard-local tile joins over bitmap blocks) | 'lfvt' /
-              'lfvt_ref' — loop-path only: each shard's S partition is
-              compiled to a ``FlatLFVT`` and shipped as plain int32
-              arrays (DESIGN.md §9); nothing |S|·W-shaped is
-              materialized, so it serves universes where the bitmap
-              packing is infeasible. 'lfvt' reduces through the live
-              row-tiled walk kernel (DESIGN.md §10, walk stats
-              mirrored); 'lfvt_ref' keeps the PR-4 whole-block jnp walk.
+              'lfvt_ref' — each shard's S partition is compiled to a
+              ``FlatLFVT`` and shipped as plain int32 arrays (DESIGN.md
+              §9); nothing |S|·W-shaped is materialized, so it serves
+              universes where the bitmap packing is infeasible. 'lfvt'
+              reduces through the live row-tiled walk kernel on the
+              loop path (DESIGN.md §10, walk stats mirrored) and — with
+              a mesh — through the bucketed sentinel-padded shard_map
+              path (DESIGN.md §11), where per-shard flat tables are
+              pow-2 grouped and padded so shards share compiled shapes.
+              'lfvt_ref' keeps the PR-4 whole-block jnp walk (loop path
+              only; pass method='lfvt' for the mesh path).
     measure:  'jaccard' | 'cosine' | 'dice' | 'overlap' — qualify
               predicate, per-shard windows and map-phase R replication all
               specialize per measure (DESIGN.md §8)
@@ -574,15 +904,24 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
               ``reduce_bytes`` counts compacted buffers (the paper's Fig. 8
               model). 'mask' — dense fallback: every per-shard boolean
               mask is transferred and scanned on host.
-    pad:      'auto' (bucket on the loop path, global under shard_map) |
-              'global' | 'bucket' — see ``shard_blocks``.
+    pad:      'auto' (bucket on the loop and mesh-lfvt paths, global for
+              stacked-bitmap shard_map) | 'global' | 'bucket' — see
+              ``shard_blocks``; defaults to ``global_config.pad_mode``.
     pair_capacity: initial per-shard pair-buffer capacity hint for
               emit='pairs'; regrown automatically on overflow.
+
+    ``axis`` and ``pad`` default to ``global_config`` (core/config.py)
+    when None.
     """
+    axis = axis or global_config.mesh_axis
+    pad = pad or global_config.pad_mode
     if emit not in ("pairs", "mask"):
         raise ValueError(f"unknown emit mode {emit!r}")
     if pad not in ("auto", "global", "bucket"):
         raise ValueError(f"unknown pad mode {pad!r}")
+    if method not in ("popcount", "onehot", "kernel_bitmap", "kernel_onehot",
+                      "lfvt", "lfvt_ref"):
+        raise ValueError(f"unknown method {method!r}")
     if not len(R) or not len(S):
         if stats is not None:  # consumers index these unconditionally
             stats.update(
@@ -602,12 +941,19 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
         R, S, t, n_shards, measure=measure)
     if method in ("lfvt", "lfvt_ref"):
-        # per-shard flat arrays are ragged (node/seq counts differ), so
-        # the shard_map stacked layout cannot hold them — loop path only
         if mesh is not None:
-            raise ValueError(
-                f"method={method!r} runs on the loop path only (mesh=None);"
-                " per-shard FlatLFVT arrays are ragged")
+            if method == "lfvt_ref":
+                raise ValueError(
+                    "method='lfvt_ref' runs on the loop path only "
+                    "(mesh=None); use method='lfvt' for the bucketed "
+                    "shard_map mesh path")
+            assert mesh.shape[axis] == part.n_shards, (mesh.shape,
+                                                       part.n_shards)
+            pad_mode = pad if pad != "auto" else "bucket"
+            return _lfvt_mesh_join(R, S, t, part, mesh, axis, emit=emit,
+                                   pad=pad_mode,
+                                   pair_capacity=pair_capacity,
+                                   measure=measure, stats=stats)
         return _lfvt_loop_join(R, S, t, part, emit=emit,
                                pair_capacity=pair_capacity, measure=measure,
                                stats=stats,

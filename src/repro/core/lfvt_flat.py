@@ -63,10 +63,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import measures
+from .config import global_config
 from .fvt import FVT, LFVT
 from .sets import SetCollection
 
-__all__ = ["FlatLFVT", "FlatLFVTDevice", "encode", "flat_join_mask"]
+__all__ = ["FlatLFVT", "FlatLFVTDevice", "encode", "flat_join_mask",
+           "flat_walk_caps", "pad_flat_tables", "entry_positions"]
 
 
 class FlatLFVTDevice(NamedTuple):
@@ -286,6 +288,88 @@ def encode(S: SetCollection, tree: FVT | LFVT | None = None) -> FlatLFVT:
         entry_len=entry_len,
         s_ids=Ss.ids.astype(np.int32), s_sizes=Ss.sizes().astype(np.int32),
         universe=int(S.universe), max_seq_len=int(entry_len.max(initial=0)))
+
+
+# ---------------------------------------------------------------------- #
+# sentinel padding: rectangular flat tables for the mesh path
+# ---------------------------------------------------------------------- #
+def flat_walk_caps(flat: FlatLFVT) -> dict:
+    """The table sizes that make per-shard flat arrays ragged — the
+    bucketing axes of the mesh path (core/distributed.py): node/seq/
+    entry/set counts plus the static walk bound."""
+    return {"n_nodes": flat.n_nodes, "n_seq": len(flat.seq_row),
+            "n_entries": len(flat.entry_elem), "n_sets": flat.n_sets,
+            "max_seq_len": flat.max_seq_len}
+
+
+def entry_positions(flat: FlatLFVT) -> np.ndarray:
+    """(E,) absolute walk start per entry: ``node_seq_off[entry_node] +
+    entry_off``. Precomputed host-side so mesh shards ship only the
+    entry/seq tables — the walk never needs the node table once entries
+    are resolved to positions (the fused ``seq_next`` hop already
+    encodes the parent chain)."""
+    if not len(flat.entry_elem):
+        return np.zeros(0, np.int32)
+    return (flat.node_seq_off[flat.entry_node]
+            + flat.entry_off).astype(np.int32)
+
+
+def _pad1(a: np.ndarray, size: int, fill) -> np.ndarray:
+    assert size >= len(a), (size, len(a))
+    return np.concatenate(
+        [a, np.full(size - len(a), fill, a.dtype)]).astype(a.dtype)
+
+
+def pad_flat_tables(flat: FlatLFVT, *, n_nodes: int | None = None,
+                    n_seq: int | None = None, n_entries: int | None = None,
+                    n_sets: int | None = None,
+                    max_seq_len: int | None = None) -> FlatLFVT:
+    """Sentinel-pad the flat tables to the given caps (each defaults to
+    the current size; must not shrink). Returns a new ``FlatLFVT`` whose
+    walks are bit-identical to the original — the sentinel rows are
+    unreachable by construction:
+
+      * entry rows: ``entry_elem`` = int32 max (keeps the table sorted;
+        never equals a real element id, which is < universe), entry_len
+        = 0 so a lane that did resolve one would die before stepping;
+      * seq rows: ``seq_row`` = 0 / ``seq_next`` = -1 — no real entry
+        position or hop chain ever points past the original T;
+      * node rows: empty sequence, parent -1 (root-shaped; nothing
+        points at them), child/owner CSRs extended with empty slices;
+      * set rows: ``s_sizes`` = 0 (outside every real [lo, hi) window
+        and f > 0 can never hold), ``s_ids`` = -1 (host-side id filter).
+
+    ``max_seq_len`` may be raised past the true bound so a bucket of
+    shards shares one static walk-length trace; the walk's while_loop
+    exits on live lanes, so the extra bound costs nothing at run time.
+    """
+    caps = flat_walk_caps(flat)
+    n_nodes = caps["n_nodes"] if n_nodes is None else n_nodes
+    n_seq = caps["n_seq"] if n_seq is None else n_seq
+    n_entries = caps["n_entries"] if n_entries is None else n_entries
+    n_sets = caps["n_sets"] if n_sets is None else n_sets
+    max_seq_len = (caps["max_seq_len"] if max_seq_len is None
+                   else max(max_seq_len, caps["max_seq_len"]))
+    sentinel = np.int32(global_config.flat_pad_sentinel)
+    return FlatLFVT(
+        node_seq_off=_pad1(flat.node_seq_off, n_nodes, 0),
+        node_seq_len=_pad1(flat.node_seq_len, n_nodes, 0),
+        node_parent=_pad1(flat.node_parent, n_nodes, -1),
+        child_indptr=_pad1(flat.child_indptr, n_nodes + 1,
+                           flat.child_indptr[-1]),
+        child_ids=flat.child_ids,
+        owner_indptr=_pad1(flat.owner_indptr, n_nodes + 1,
+                           flat.owner_indptr[-1]),
+        owner_elems=flat.owner_elems,
+        seq_row=_pad1(flat.seq_row, n_seq, 0),
+        seq_next=_pad1(flat.seq_next, n_seq, -1),
+        entry_elem=_pad1(flat.entry_elem, n_entries, sentinel),
+        entry_node=_pad1(flat.entry_node, n_entries, 0),
+        entry_off=_pad1(flat.entry_off, n_entries, 0),
+        entry_len=_pad1(flat.entry_len, n_entries, 0),
+        s_ids=_pad1(flat.s_ids, n_sets, -1),
+        s_sizes=_pad1(flat.s_sizes, n_sets, 0),
+        universe=flat.universe, max_seq_len=max_seq_len)
 
 
 # ---------------------------------------------------------------------- #

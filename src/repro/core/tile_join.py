@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import measures
+from .config import global_config
 from .sets import SetCollection
 
 __all__ = [
@@ -160,15 +161,17 @@ def _onehot_qualify(r_pad, r_sz, s_pad, s_sz, col_lo, col_hi, *, t, universe,
 
 # Capacity rounding for the jitted compactions (static output size):
 # next power-of-two multiple of the grain, so recompiles are O(log) in
-# result size. Canonical definition — the kernels layer re-exports it.
-PAIR_CAP_GRAIN = 128
+# result size. The grain lives in ``core.config`` now; this name is the
+# import-time alias the kernels layer re-exports.
+PAIR_CAP_GRAIN = global_config.pair_cap_grain
 
 
 def round_capacity(n: int) -> int:
-    """Regrow protocol: next power-of-two multiple of PAIR_CAP_GRAIN >= n."""
+    """Regrow protocol: next power-of-two multiple of the capacity grain
+    (``global_config.pair_cap_grain``) >= n."""
     if n <= 0:
         return 0
-    cap = PAIR_CAP_GRAIN
+    cap = global_config.pair_cap_grain
     while cap < n:
         cap *= 2
     return cap
@@ -296,10 +299,10 @@ def _r_block_rep(R: SetCollection, family: str, W: int, start: int,
 
 
 def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
-                      method: str = "popcount", r_block: int = 1024,
+                      method: str = "popcount", r_block: int | None = None,
                       stats: dict | None = None, emit: str = "pairs",
                       pair_capacity: int | None = None,
-                      double_buffer: bool = True,
+                      double_buffer: bool | None = None,
                       measure: str = "jaccard") -> set:
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
@@ -308,11 +311,10 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             | 'lfvt' (flat-array LFVT walk, DESIGN.md §9-§10 — S-side
             device memory ~ Σ|seq| tuples plus E ≤ Σ|seq| sparse entry
             rows, never O(U), instead of the |S|·⌈U/32⌉ bitmap sheet;
-            the path for large element universes; with emit='pairs' it
-            runs the live row-tiled walk kernel — Mosaic on TPU, its
+            the path for large element universes; both emit modes run
+            the live row-tiled walk kernel — Mosaic on TPU, its
             compiled jnp twin elsewhere — with walk_steps/early_stops/
-            live_tiles stats; the emit='mask' fallback uses the jnp walk
-            for both lfvt methods) | 'lfvt_ref' (the PR-4 whole-block
+            live_tiles stats) | 'lfvt_ref' (the PR-4 whole-block
             jnp walk, kept as the reference fallback and the
             `--impl ref` bench axis).
     measure: 'jaccard' | 'cosine' | 'dice' | 'overlap' (DESIGN.md §8) —
@@ -329,7 +331,13 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             work is dispatched *before* block k's pair count is synced to
             host, so device compute overlaps host-side result building.
             Results are identical with it off (debug knob).
+
+    ``r_block`` and ``double_buffer`` default to ``global_config``
+    (core/config.py) when None.
     """
+    r_block = r_block or global_config.r_block
+    if double_buffer is None:
+        double_buffer = global_config.double_buffer
     if emit not in ("pairs", "mask"):
         raise ValueError(f"unknown emit mode {emit!r}")
     if not len(R) or not len(S):
@@ -363,7 +371,15 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         PAIR_CAP_GRAIN)
     acc = {"out_sparse": 0, "out_dense": 0, "n_pairs": 0, "live": 0,
            "total_tiles": 0, "regrows": 0, "r_rep_hits": 0,
-           "walk_steps": 0, "early_stops": 0}
+           "walk_steps": 0, "early_stops": 0, "walk_vmem": 0}
+
+    def fold_kernel_stats(kstats: dict) -> None:
+        acc["live"] += kstats.get("live_tiles", 0)
+        acc["total_tiles"] += kstats.get("total_tiles", 0)
+        acc["walk_steps"] += kstats.get("walk_steps", 0)
+        acc["early_stops"] += kstats.get("early_stops", 0)
+        acc["walk_vmem"] = max(acc["walk_vmem"],
+                               kstats.get("walk_vmem_tile_bytes", 0))
 
     def dispatch(start: int) -> dict:
         """Launch all of one R block's device work; no host syncs."""
@@ -396,9 +412,20 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                     s_rep, r_rep, r_sz, lo, hi, t, measure=measure)
             return blk
         if method in ("lfvt", "lfvt_ref"):
-            from .lfvt_flat import flat_join_mask
-            mask = flat_join_mask(s_rep, r_rep, r_sz, lo, hi, t, measure)
-        elif method == "popcount":
+            # emit='mask' rides the same dispatch as emit='pairs' (the
+            # walk kernel for 'lfvt', the whole-block jnp walk for
+            # 'lfvt_ref'); only the finalize differs — the staged tile
+            # masks are scattered back dense instead of pair-compacted
+            if method == "lfvt":
+                blk["mask_pending"] = kops.lfvt_walk_join_pairs_dispatch(
+                    s_rep, r_rep, r_sizes_all[sl], lo_all[sl], hi_all[sl],
+                    t, measure=measure)
+            else:
+                blk["mask_pending"] = kops.lfvt_join_pairs_dispatch(
+                    s_rep, r_rep, r_sz, lo, hi, t, measure=measure)
+            blk["mb"] = stop - start
+            return blk
+        if method == "popcount":
             mask = _popcount_qualify(r_rep, r_sz, s_rep, s_sz, lo, hi, t=t,
                                      measure=measure)
         elif method == "onehot":
@@ -431,11 +458,8 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             local = np.asarray(pp[:n_pairs] if n_pairs else pp[:0])
             acc["out_sparse"] += 8 * n_pairs + 4 + kstats.get(
                 "counts_bytes", 0)
-            acc["live"] += kstats.get("live_tiles", 0)
-            acc["total_tiles"] += kstats.get("total_tiles", 0)
             acc["regrows"] += kstats.get("regrows", 0)
-            acc["walk_steps"] += kstats.get("walk_steps", 0)
-            acc["early_stops"] += kstats.get("early_stops", 0)
+            fold_kernel_stats(kstats)
         elif emit == "pairs":
             n_pairs = int(blk["total"])  # the only host sync per block
             cap = spec_cap
@@ -449,7 +473,13 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                      if cap else np.zeros((0, 2), np.int64))
             acc["out_sparse"] += 8 * n_pairs + 4
         else:
-            mask_np = np.asarray(blk["mask"])
+            if "mask_pending" in blk:
+                kstats = {}
+                mask_np = kops.join_mask_finalize(
+                    blk["mask_pending"], blk["mb"], len(Ss), kstats)
+                fold_kernel_stats(kstats)
+            else:
+                mask_np = np.asarray(blk["mask"])
             acc["out_sparse"] += mask_np.size
             rr, ss = np.nonzero(mask_np)
             local = np.stack([rr, ss], axis=1) if len(rr) else (
@@ -484,12 +514,16 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         stats["double_buffered"] = double_buffer
         stats["regrows"] = acc["regrows"]
         stats["r_rep_cache_hits"] = acc["r_rep_hits"]
-        if kernel_pairs:
+        if kernel_pairs or method in ("lfvt", "lfvt_ref"):
             stats["live_tiles"] = acc["live"]
             stats["total_tiles"] = acc["total_tiles"]
-        if method == "lfvt" and kernel_pairs:
+        if method == "lfvt":
+            # both emit modes run the kernel dispatch now, so the walk
+            # counters (and the VMEM tile accounting that replaced the
+            # SMEM prefetch budget) are always available
             stats["walk_steps"] = acc["walk_steps"]
             stats["early_stops"] = acc["early_stops"]
+            stats["walk_vmem_tile_bytes"] = acc["walk_vmem"]
         if method in ("lfvt", "lfvt_ref"):
             # the §9 memory axis: what the flat S rep holds on device vs
             # what the bitmap sheet would have cost at this universe

@@ -82,17 +82,38 @@ def make_join_dataset(name: str, scale: float = 1.0, seed: int = 0):
     return R, S
 
 
-def make_skew_dataset(n: int, universe: int, a: float = 1.4, seed: int = 0):
+def make_skew_dataset(n: int, universe: int, a: float = 1.4, seed: int = 0,
+                      max_len: int | None = None,
+                      element_a: float | None = None):
     """(R, S) with Zipf(``a``)-distributed *set sizes* — the shard-skew
     stressor: a handful of huge sets next to a long tail of tiny ones,
-    which is exactly the load pathology Eq. 2-3 partitioning targets."""
+    which is exactly the load pathology Eq. 2-3 partitioning targets.
+
+    ``max_len`` caps the Zipf tail (default ``universe // 4``); large-
+    universe sweeps set it so the padded R layout stays rectangular-
+    cheap while the size skew is preserved.
+
+    ``element_a`` optionally Zipf-skews element *popularity* as well
+    (ids drawn as clipped ``zipf(element_a)`` samples instead of
+    uniformly): sets then share the head elements, so the LFVT grows
+    deep sequences and walks do real work even at ``universe >> n`` —
+    the regime the distributed benches exercise. Uniform draws over a
+    2^21 universe would never collide and every walk would die at its
+    entry row."""
     rng = np.random.default_rng(seed)
-    max_len = max(universe // 4, 2)
+    max_len = max_len if max_len is not None else max(universe // 4, 2)
 
     def side():
         sizes = np.clip(rng.zipf(a, n), 1, max_len)
+        if element_a is None:
+            return SetCollection.from_ragged(
+                [rng.choice(universe, size=int(s), replace=False)
+                 for s in sizes],
+                universe=universe)
         return SetCollection.from_ragged(
-            [rng.choice(universe, size=int(s), replace=False) for s in sizes],
+            [np.unique(np.minimum(rng.zipf(element_a, size=int(s)) - 1,
+                                  universe - 1))
+             for s in sizes],
             universe=universe)
 
     return side(), side()

@@ -11,13 +11,17 @@ the Mosaic execution layer for that walk:
     rows): the R block is sorted by set size (rows with near-identical
     Lemma-3.1 windows share a tile) and cut into ``ROW_TILE``-row tiles;
     tiles whose windows exclude every S column never enter the grid.
-  * **Scalar prefetch** (``PrefetchScalarGridSpec``): the live-tile ids,
-    the per-R-element entry rows (resolved to lane ``(position,
-    remaining)`` pairs) and the ``node_seq_off/seq_len/parent`` columns
-    — prefetched in their fused form, the ``seq_next`` hop column the
-    encoder derives from exactly those three — ride in SMEM ahead of
-    the body, steering the per-tile block DMAs like the bitmap
-    live-tile kernel's ``(ti, tj)`` lists.
+  * **Scalar prefetch for the schedule only** (``PrefetchScalarGridSpec``):
+    the live-tile id list rides in SMEM ahead of the body and steers the
+    per-tile block DMAs like the bitmap live-tile kernel's ``(ti, tj)``
+    lists. The bulk lane state — the per-R-element entry rows resolved
+    to lane ``(position, remaining)`` pairs, and the fused ``seq_next``
+    hop column — is **VMEM-fed**: BlockSpec'd tiles DMA'd per live row
+    tile (lanes) or once per launch (the seq/nxt rows), so the working
+    set scales with VMEM, not the old ``SMEM_PREFETCH_BUDGET`` that
+    forced a fallback to the jnp twin past Mp·Lr + Σ|seq| ≈ 2^20
+    (``walk_vmem_tile_bytes`` is the replacement accounting, surfaced
+    in driver stats).
   * **VMEM-resident count tile**: each grid step owns one
     ``(ROW_TILE, S_cols)`` int32 overlap-count tile that stays on-chip
     across all walk steps — nothing ``(mb, n)``-shaped is re-built per
@@ -47,33 +51,40 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import measures
+from repro.core.config import global_config
 
 __all__ = ["DEFAULT_ROW_TILE", "COL_PAD", "plan_row_tiles", "entry_state",
+           "walk_vmem_tile_bytes", "fits_vmem",
            "lfvt_walk_live_tiled", "lfvt_walk_live_tiled_ref"]
 
-# Rows per grid step (multiple of the int32 sublane 8). Small tiles keep
-# each tile's while_loop bound at its own slowest lane — one hot element
-# serializes its tile, not the whole block; 16 balances that against
-# per-tile launch overhead on the compiled-twin path.
-DEFAULT_ROW_TILE = 16
-# Lane (last-dim) padding multiple for the count tile / S-size row.
-COL_PAD = 128
-# The scalar-prefetch operands (lane entry rows + the fused seq columns)
-# are SMEM-resident on real hardware and scale with Mp·Lr + Σ|seq|, so
-# the auto dispatch falls back to the compiled jnp twin beyond this
-# budget instead of failing Mosaic allocation at exactly the
-# large-universe workloads the path serves. Feeding the lane state
-# through BlockSpec'd VMEM instead is the ROADMAP follow-up that lifts
-# the bound.
-SMEM_PREFETCH_BUDGET = 1 << 20
+# Historical aliases — ``core.config.global_config`` is the source of
+# truth (row_tile / col_pad); call sites resolve at call time.
+DEFAULT_ROW_TILE = global_config.row_tile
+COL_PAD = global_config.col_pad
 
 
-def prefetch_fits_smem(mp: int, lr: int, tp: int,
-                       budget: int = SMEM_PREFETCH_BUDGET) -> bool:
-    """True when the kernel's scalar-prefetch working set — two (mp, lr)
-    int32 lane arrays + the (tp,) seq_row/seq_next columns — fits the
-    budget (the live-tile id list is noise)."""
-    return 4 * (2 * mp * lr + 2 * tp) <= budget
+def walk_vmem_tile_bytes(tm: int, lr: int, npad: int, tp: int) -> int:
+    """Per-grid-step VMEM residency of the walk kernel's working set.
+
+    Two (tm, lr) int32 lane tiles (entry position / remaining steps,
+    DMA'd per live row tile), the (1, tp) int32 seq_row + seq_next rows,
+    the (1, npad) int32 S-size row, three (tm, 1) int32 window columns,
+    the (tm, npad) int32 count scratch and the (tm, npad) bool mask
+    output tile. Replaces the removed SMEM prefetch budget: only the
+    live-tile id list is scalar-prefetched now, so the lane state scales
+    with VMEM and there is no fallback-to-twin threshold — drivers
+    surface this accounting in stats instead.
+    """
+    return (4 * (2 * tm * lr + 2 * tp + npad + 3 * tm + tm * npad)
+            + tm * npad)
+
+
+def fits_vmem(tm: int, lr: int, npad: int, tp: int,
+              budget: int | None = None) -> bool:
+    """Advisory check of the per-step working set against the VMEM budget
+    (``global_config.vmem_budget`` by default)."""
+    budget = global_config.vmem_budget if budget is None else budget
+    return walk_vmem_tile_bytes(tm, lr, npad, tp) <= budget
 
 
 def plan_row_tiles(lo: np.ndarray, hi: np.ndarray, tm: int) -> np.ndarray:
@@ -250,19 +261,19 @@ def lfvt_walk_live_tiled_ref(ti, lane_pos, lane_rem, nxt2d, seq2d, ssz2d,
 
 
 # ---------------------------------------------------------------------- #
-# Pallas kernel — scalar-prefetched Mosaic body
+# Pallas kernel — VMEM-fed Mosaic body (only the tile ids are prefetched)
 # ---------------------------------------------------------------------- #
 def _walk_kernel(ti_ref, lpos_ref, lrem_ref, nxt_ref, seq_ref, ssz_ref,
                  rsz_ref, lo_ref, hi_ref, mask_ref, cnt_ref, steps_ref,
                  stops_ref, acc_ref, *, t: float, measure: str,
                  max_steps: int, tm: int):
-    # program_id read outside pl.when bodies (PR-1 interpreter shim rule)
-    l = pl.program_id(0)
-    base = ti_ref[l] * tm
-    # scalar-prefetched lane entry rows for this tile + the fused
-    # node_seq_off/seq_len/parent hop column
-    pos = lpos_ref[pl.ds(base, tm), :]
-    rem = lrem_ref[pl.ds(base, tm), :]
+    del ti_ref  # consumed by the BlockSpec index maps, not the body
+    # VMEM-fed lane state: this tile's (tm, Lr) entry rows arrive as a
+    # BlockSpec'd DMA steered by the prefetched live-tile ids, and the
+    # fused node_seq_off/seq_len/parent hop column rides in VMEM beside
+    # the seq rows — nothing lane-shaped lives in SMEM anymore
+    pos = lpos_ref[...]
+    rem = lrem_ref[...]
     nxt = nxt_ref[...][0]
     seq = seq_ref[...][0]
     npad = acc_ref.shape[1]
@@ -295,27 +306,34 @@ def lfvt_walk_live_tiled(ti, lane_pos, lane_rem, nxt, seq2d, ssz2d, rsz,
                          tm: int, interpret=False):
     """Flat-LFVT walk over live row tiles only; see ops.lfvt_walk_join_pairs.
 
-    ti (L,) live row-tile ids; lane_pos/lane_rem (Mp, Lr) resolved entry
-    rows; nxt (1, Tp) fused hop column — all int32, scalar-prefetched.
-    seq2d (1, Tp) tuple rows, ssz2d (1, NP) padded S sizes, rsz/lo/hi
-    (Mp, 1). Returns (mask (L, tm, NP) bool, counts, walk_steps,
-    early_stops — each (L, 1) int32), all device-resident for the
-    ``PendingPairs`` compaction protocol.
+    ti (L,) live row-tile ids — the only scalar-prefetch operand (it
+    steers the index maps). lane_pos/lane_rem (Mp, Lr) resolved entry
+    rows and nxt (1, Tp) fused hop column are BlockSpec'd VMEM operands:
+    each grid step DMAs its own (tm, Lr) lane tile, so the lane working
+    set is bounded by ``walk_vmem_tile_bytes`` rather than the removed
+    SMEM prefetch budget. seq2d (1, Tp) tuple rows, ssz2d (1, NP) padded
+    S sizes, rsz/lo/hi (Mp, 1). Returns (mask (L, tm, NP) bool, counts,
+    walk_steps, early_stops — each (L, 1) int32), all device-resident
+    for the ``PendingPairs`` compaction protocol.
     """
     L = ti.shape[0]
+    Lr = lane_pos.shape[1]
     NP = ssz2d.shape[1]
     assert rsz.shape[0] % tm == 0, (rsz.shape, tm)
     kernel = functools.partial(_walk_kernel, t=t, measure=measure,
                                max_steps=max_steps, tm=tm)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=1,
         grid=(L,),
         in_specs=[
-            pl.BlockSpec(seq2d.shape, lambda l, *pf: (0, 0)),      # seq rows
-            pl.BlockSpec((1, NP), lambda l, *pf: (0, 0)),          # s sizes
-            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # r sizes
-            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # lo
-            pl.BlockSpec((tm, 1), lambda l, ti, *pf: (ti[l], 0)),  # hi
+            pl.BlockSpec((tm, Lr), lambda l, ti: (ti[l], 0)),  # lane pos
+            pl.BlockSpec((tm, Lr), lambda l, ti: (ti[l], 0)),  # lane rem
+            pl.BlockSpec(nxt.shape, lambda l, ti: (0, 0)),     # hop column
+            pl.BlockSpec(seq2d.shape, lambda l, ti: (0, 0)),   # seq rows
+            pl.BlockSpec((1, NP), lambda l, ti: (0, 0)),       # s sizes
+            pl.BlockSpec((tm, 1), lambda l, ti: (ti[l], 0)),   # r sizes
+            pl.BlockSpec((tm, 1), lambda l, ti: (ti[l], 0)),   # lo
+            pl.BlockSpec((tm, 1), lambda l, ti: (ti[l], 0)),   # hi
         ],
         out_specs=[
             pl.BlockSpec((1, tm, NP), lambda l, *pf: (l, 0, 0)),

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.config import global_config
 from repro.core.tile_join import PAIR_CAP_GRAIN, round_capacity
 
 from . import bitmap_join as _bj
@@ -38,7 +39,8 @@ __all__ = ["bitmap_join", "onehot_join", "bitmap_join_pairs",
            "PAIR_CAP_GRAIN", "PendingPairs", "bitmap_join_pairs_dispatch",
            "onehot_join_pairs_dispatch", "lfvt_join_pairs",
            "lfvt_join_pairs_dispatch", "lfvt_walk_join_pairs",
-           "lfvt_walk_join_pairs_dispatch", "join_pairs_finalize"]
+           "lfvt_walk_join_pairs_dispatch", "join_pairs_finalize",
+           "join_mask_finalize", "lfvt_walk_join_mask"]
 
 
 def _interpret_default():
@@ -295,6 +297,60 @@ def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
     return pairs, total
 
 
+def join_mask_finalize(pending: PendingPairs, m: int, n: int,
+                       stats: dict | None = None) -> np.ndarray:
+    """Resolve a dispatched sparse join into the dense (m, n) bool mask.
+
+    The emit='mask' counterpart of ``join_pairs_finalize``: the staged
+    live-tile sub-masks are scattered back onto the full row-tile grid
+    (skipped tiles stay all-False — their windows are empty, so that is
+    exact), the dispatch's size-sort is undone through ``row_map``, and
+    the padding is sliced off. Shares the same ``PendingPairs`` handle,
+    so mask emission now rides the same kernel dispatch (and reports the
+    same ``walk_steps``/``early_stops`` counters) as pair emission.
+    """
+    L = pending.live_tiles
+    if stats is not None:
+        stats["live_tiles"] = L
+        stats["total_tiles"] = pending.total_tiles
+        stats["dense_mask_bytes"] = pending.dense_mask_bytes
+        if pending.extras:
+            for key, dev in pending.extras.items():
+                stats[key] = int(np.asarray(dev).sum())
+    if L == 0:
+        return np.zeros((m, n), bool)
+    masks = np.asarray(pending.masks)  # (L, tm, NP)
+    tm = pending.tm
+    ti = np.asarray(pending.tile_i)
+    full = np.zeros((pending.total_tiles * tm, masks.shape[2]), bool)
+    full.reshape(pending.total_tiles, tm, -1)[ti] = masks
+    if pending.row_map is None:
+        return full[:m, :n]
+    out = np.zeros((m, n), bool)
+    rm = np.asarray(pending.row_map)
+    valid = rm >= 0
+    out[rm[valid]] = full[valid][:, :n]
+    return out
+
+
+def lfvt_walk_join_mask(flat, r_padded, r_sizes, lo, hi, t: float,
+                        measure: str = "jaccard", impl: str | None = None,
+                        row_tile: int | None = None,
+                        interpret: bool | None = None,
+                        stats: dict | None = None) -> np.ndarray:
+    """Dense-mask flat-LFVT join through the live row-tiled walk kernel.
+
+    Same dispatch as ``lfvt_walk_join_pairs`` (so emit='mask' gets the
+    kernel and its walk counters too), resolved by
+    ``join_mask_finalize`` instead of pair compaction.
+    """
+    pending = lfvt_walk_join_pairs_dispatch(
+        flat, r_padded, r_sizes, lo, hi, t, measure=measure, impl=impl,
+        row_tile=row_tile, interpret=interpret)
+    return join_mask_finalize(pending, int(np.shape(r_padded)[0]),
+                              flat.n_sets, stats)
+
+
 def _join_pairs(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps, s_sizes,
                 lo, hi, t, tiles, interpret, capacity, stats,
                 measure="jaccard"):
@@ -400,23 +456,23 @@ def lfvt_walk_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
 
     impl: None/'auto' — Mosaic kernel on TPU, the XLA-compiled jnp twin
           elsewhere (interpret mode is a correctness harness, not an
-          execution path); auto also drops to the twin when the
-          scalar-prefetch working set would exceed the SMEM budget
-          (``lfvt_walk.prefetch_fits_smem``) instead of failing Mosaic
-          allocation; 'pallas' — force the Pallas kernel (interpret
+          execution path); 'pallas' — force the Pallas kernel (interpret
           off-TPU; what the parity tests pin); 'jnp' — force the twin.
+          The lane state is VMEM-fed (BlockSpec'd tiles, not SMEM scalar
+          prefetch), so there is no size-based fallback anymore — the
+          per-step working set is reported instead
+          (``walk_vmem_tile_bytes`` via ``PendingPairs.extras``).
     Emits ``walk_steps``/``early_stops`` device counters via
     ``PendingPairs.extras`` and the row sort via ``row_map``; the shared
     finalize folds both back out.
     """
     from . import lfvt_walk as _lw
 
-    auto = impl in (None, "auto")
-    if auto:
+    if impl in (None, "auto"):
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl not in ("pallas", "jnp"):
         raise ValueError(f"unknown lfvt walk impl {impl!r}")
-    tm = row_tile or _lw.DEFAULT_ROW_TILE
+    tm = row_tile or global_config.row_tile
     r_padded = jnp.asarray(r_padded)
     m, Lr = r_padded.shape
     n = flat.n_sets
@@ -439,9 +495,6 @@ def lfvt_walk_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
     ti = _lw.plan_row_tiles(lo_p, hi_p, tm)
     if len(ti) == 0:
         return PendingPairs(None, None, None, None, tm, n, 0, m_tiles, m * n)
-    if (auto and impl == "pallas" and not _lw.prefetch_fits_smem(
-            m + pad_rows, Lr, len(flat.seq_row))):
-        impl = "jnp"  # over the SMEM prefetch budget: run the twin
     r_perm = jnp.pad(jnp.take(r_padded, jnp.asarray(order), axis=0),
                      ((0, pad_rows), (0, 0)), constant_values=-1)
     lane_pos, lane_rem = _lw.entry_state(dev, r_perm)
@@ -465,7 +518,12 @@ def lfvt_walk_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
     return PendingPairs(
         masks, counts, jnp.asarray(ti), jnp.zeros(len(ti), jnp.int32),
         tm, ssz2d.shape[1], len(ti), m_tiles, m * n,
-        extras={"walk_steps": steps, "early_stops": stops}, row_map=row_map)
+        extras={"walk_steps": steps, "early_stops": stops,
+                # host int: the per-grid-step VMEM working set this
+                # launch was accounted at (replaces the SMEM budget)
+                "walk_vmem_tile_bytes": _lw.walk_vmem_tile_bytes(
+                    tm, Lr, ssz2d.shape[1], seq2d.shape[1])},
+        row_map=row_map)
 
 
 def lfvt_walk_join_pairs(flat, r_padded, r_sizes, lo, hi, t: float,

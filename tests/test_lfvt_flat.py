@@ -334,15 +334,21 @@ def test_flat_join_mask_matches_bruteforce():
     assert got == brute_force_join(R, S, t)
 
 
-def test_mr_lfvt_requires_loop_path():
+def test_mr_lfvt_runs_on_mesh():
+    """method='lfvt' with a mesh takes the bucketed shard_map path and
+    matches the loop path and the host oracle (single forced device)."""
     import jax
     from jax.sharding import Mesh
     from repro.core.distributed import mr_cf_rs_join
-    R = random_collection(1, n=6)
-    S = random_collection(2, n=6)
+    R = random_collection(1, n=10)
+    S = random_collection(2, n=12)
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
-    with pytest.raises(ValueError, match="loop path"):
-        mr_cf_rs_join(R, S, 0.5, 1, method="lfvt", mesh=mesh)
+    st: dict = {}
+    got = mr_cf_rs_join(R, S, 0.5, 1, method="lfvt", mesh=mesh, stats=st)
+    assert got == mr_cf_rs_join(R, S, 0.5, 1, method="lfvt")
+    assert got == brute_force_join(R, S, 0.5)
+    assert st["mesh_devices"] == 1 and st["n_buckets"] >= 1
+    assert 0.0 <= st["flat_pad_waste"] < 1.0
 
 
 def test_unknown_method_still_raises():
@@ -543,29 +549,40 @@ def test_walk_kernel_driver_stats_and_mr_parity():
     assert mr_r["walk_steps"] == 0  # ref shards emit no walk counters
 
 
-def test_mr_lfvt_ref_also_requires_loop_path():
+def test_mr_lfvt_ref_still_requires_loop_path():
+    """The jnp reference method has no mesh implementation; the error
+    must name 'lfvt' as the mesh-capable method."""
     import jax
     from jax.sharding import Mesh
     from repro.core.distributed import mr_cf_rs_join
     R = random_collection(1, n=6)
     S = random_collection(2, n=6)
     mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
-    with pytest.raises(ValueError, match="loop path"):
+    with pytest.raises(ValueError, match="use method='lfvt'"):
         mr_cf_rs_join(R, S, 0.5, 1, method="lfvt_ref", mesh=mesh)
 
 
-def test_walk_kernel_smem_prefetch_budget():
-    """The auto dispatch must drop to the compiled twin once the
-    scalar-prefetch working set (lane arrays + seq columns) outgrows the
-    SMEM budget, instead of failing Mosaic allocation on hardware."""
-    from repro.kernels.lfvt_walk import (SMEM_PREFETCH_BUDGET,
-                                         prefetch_fits_smem)
-    assert prefetch_fits_smem(1024, 32, 10_000)
-    # 2*(Mp*Lr) + 2*T int32s just over / under the budget
-    words = SMEM_PREFETCH_BUDGET // 4
-    assert prefetch_fits_smem(1, 1, (words - 2) // 2)
-    assert not prefetch_fits_smem(1, 1, words // 2)
-    assert not prefetch_fits_smem(words, 1, 0)
+def test_walk_kernel_vmem_tile_accounting():
+    """Per-grid-step VMEM residency replaces the removed SMEM prefetch
+    budget: the accounting must match the BlockSpec'd working set (two
+    int32 lane tiles, seq_row+seq_next rows, S sizes, window columns,
+    count scratch, bool mask tile) and the advisory check must honor
+    both explicit and config budgets."""
+    from repro.core.config import global_config
+    from repro.kernels.lfvt_walk import fits_vmem, walk_vmem_tile_bytes
+    tm, lr, npad, tp = 16, 8, 128, 300
+    expect = 4 * (2 * tm * lr + 2 * tp + npad + 3 * tm + tm * npad) \
+        + tm * npad
+    assert walk_vmem_tile_bytes(tm, lr, npad, tp) == expect
+    assert fits_vmem(tm, lr, npad, tp, budget=expect)
+    assert not fits_vmem(tm, lr, npad, tp, budget=expect - 1)
+    assert fits_vmem(tm, lr, npad, tp) == \
+        (expect <= global_config.vmem_budget)
+    # monotone in every shape parameter
+    assert walk_vmem_tile_bytes(2 * tm, lr, npad, tp) > expect
+    assert walk_vmem_tile_bytes(tm, 2 * lr, npad, tp) > expect
+    assert walk_vmem_tile_bytes(tm, lr, 2 * npad, tp) > expect
+    assert walk_vmem_tile_bytes(tm, lr, npad, 2 * tp) > expect
 
 
 def test_walk_kernel_unknown_impl_raises():
