@@ -29,7 +29,7 @@ the PR-4 whole-block jnp walk (``method='lfvt_ref'``).
 CLI: ``python -m benchmarks.bench_kernels [--measure ...] [--method
 bitmap onehot lfvt | all] [--impl kernel ref | all] [--smoke]
 [--out F.json] [--append]`` — ``--out`` writes the consolidated
-``{config, method, impl, metrics}`` row artifact (BENCH_pr6.json);
+``{config, method, impl, metrics}`` row artifact (BENCH_pr7.json);
 ``--append`` extends an existing artifact (one file across benches).
 """
 from __future__ import annotations

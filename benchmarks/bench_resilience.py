@@ -1,0 +1,140 @@
+"""Resilience-layer overhead bench: the fault-free managed task path vs
+the plain streaming drivers.
+
+The DESIGN.md §12 ladder must be effectively free when nothing fails:
+the instrumented ``fault_point`` sites are one module-global ``None``
+check when inactive, and an *empty* fault plan (``fault_plan=""``)
+routes the drivers through the resilience-managed per-task path without
+injecting anything — the configuration this bench times against the
+plain path. Runs are interleaved (plain, managed, plain, managed, ...)
+and the gated ratio is the **median of per-rep paired ratios** with GC
+paused, so shared-runner noise hits both arms alike and outlier reps
+drop out.
+
+Emits ``resilience_overhead_ratio`` (managed seconds / plain seconds,
+lower is better) per driver path; ``benchmarks/check_regression.py``
+gates it at an **absolute** ceiling of 1.05 — the <=5% overhead budget —
+on top of the relative tracked-metric diff.
+
+CLI: ``python -m benchmarks.bench_resilience [--smoke] [--out F.json]
+[--append]`` — same consolidated ``{config, method, impl, metrics}``
+artifact as the sibling benches.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.sets import SetCollection
+from repro.core.tile_join import cf_rs_join_device
+
+from .common import bench_row, emit, write_bench_json
+
+T = 0.5
+
+
+def _rs_collections(n: int, universe: int, seed: int = 7):
+    """R plus a near-duplicate S: a result-dense mid-threshold workload
+    (the task path's per-shard bookkeeping is what we are timing, so the
+    join itself should do real emission work)."""
+    rng = np.random.default_rng(seed)
+    sets_r, sets_s = [], []
+    for _ in range(n):
+        b = list(rng.choice(universe, size=rng.integers(3, 16),
+                            replace=False))
+        sets_r.append(np.array(b))
+        dup = b[:-1] if len(b) > 2 and rng.random() < 0.6 else list(b)
+        sets_s.append(np.array(dup))
+    return (SetCollection.from_ragged(sets_r, universe),
+            SetCollection.from_ragged(sets_s, universe))
+
+
+def _paired_ratio(plain_fn, managed_fn, repeat: int, inner: int = 2):
+    """Median of per-rep managed/plain ratios.
+
+    Each rep times ``inner`` back-to-back calls per arm, arms adjacent in
+    time, so both share the same scheduler/cache environment and the
+    per-rep ratio cancels drift that min-of-independent-samples cannot;
+    the median then sheds the outlier reps a shared runner produces. GC
+    is paused across the timed region (the drivers allocate heavily and
+    a collection landing in one arm skews a rep by 2x).
+
+    Returns (plain_s, managed_s, ratio): the per-call medians and the
+    median ratio (the gated metric — NOT managed_s / plain_s, which
+    would re-couple the arms across reps).
+    """
+    plains, manageds, ratios = [], [], []
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                plain_fn()
+            p = (time.perf_counter() - t0) / inner
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                managed_fn()
+            m = (time.perf_counter() - t0) / inner
+            plains.append(p)
+            manageds.append(m)
+            ratios.append(m / p)
+    finally:
+        gc.enable()
+    return (float(np.median(plains)), float(np.median(manageds)),
+            float(np.median(ratios)))
+
+
+def overhead_sweep(smoke: bool = False) -> dict:
+    n = 400 if smoke else 600
+    universe = 800 if smoke else 1200
+    repeat = 9 if smoke else 7
+    R, S = _rs_collections(n, universe)
+    out = {}
+    cases = {
+        ("mr_loop", "lfvt"): lambda plan: mr_cf_rs_join(
+            R, S, T, 4, method="lfvt", fault_plan=plan),
+        ("device", "popcount"): lambda plan: cf_rs_join_device(
+            R, S, T, method="popcount", fault_plan=plan),
+    }
+    for (path, method), fn in cases.items():
+        ref = fn(None)            # warm-up: compile both arms' kernels
+        assert fn("") == ref      # managed path is result-identical
+        plain_s, managed_s, ratio = _paired_ratio(
+            lambda: fn(None), lambda: fn(""), repeat)
+        emit(f"resilience/{path}/plain", plain_s)
+        emit(f"resilience/{path}/managed", managed_s,
+             f"ratio={ratio:.3f}")
+        out[(path, method)] = {
+            "plain_s": plain_s, "managed_s": managed_s,
+            "result_pairs": len(ref),
+            "resilience_overhead_ratio": ratio,
+        }
+    return out
+
+
+def main(smoke: bool = False) -> dict:
+    return overhead_sweep(smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload + fewer reps (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="write the consolidated row artifact here")
+    ap.add_argument("--append", action="store_true",
+                    help="extend an existing --out artifact instead of "
+                         "overwriting")
+    args = ap.parse_args()
+    res = main(smoke=args.smoke)
+    if args.out:
+        suffix = "[smoke]" if args.smoke else ""
+        rows = [bench_row(f"resilience/{path}{suffix}", method, "managed", m)
+                for (path, method), m in res.items()]
+        write_bench_json(args.out, rows, append=args.append)

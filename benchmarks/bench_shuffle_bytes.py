@@ -17,7 +17,7 @@ CLI: ``python -m benchmarks.bench_shuffle_bytes [--smoke] [--out F.json]
 ``--smoke`` runs a tiny single-dataset sweep (CI); ``--out`` writes the
 consolidated ``{config, method, impl, metrics}`` row artifact
 (``--append`` extends an existing one, so this bench and bench_kernels
-share one BENCH_pr6.json); ``--measure`` adds the similarity-measure
+share one BENCH_pr7.json); ``--measure`` adds the similarity-measure
 axis (per-measure windows change R replication, shard loads and result
 density — DESIGN.md §8); ``--method lfvt`` runs the mesh-vs-loop LFVT
 sweep instead (one shard per visible device — pair it with

@@ -1,6 +1,6 @@
 """CI bench-regression gate: diff two consolidated BENCH artifacts.
 
-Compares the current (smoke-run) ``BENCH_pr6.json`` against the
+Compares the current (smoke-run) ``BENCH_pr7.json`` against the
 committed baseline row-by-row — rows are keyed ``(config, method,
 impl)`` — and fails (exit 1) when any **tracked** metric regresses by
 more than ``--threshold`` (default 25%). Tracked metrics are
@@ -18,9 +18,14 @@ lower-is-better:
     ``RATIO_NOISE_FLOOR`` (the contender actually lost by a margin
     noise cannot explain).
 
-Rows present on only one side are reported but never fail the gate
-(configs come and go with sweep changes); a missing tracked metric on
-one side is likewise skipped. Non-numeric metric values are ignored.
+Rows present on only one side are reported but never fail the
+relative diff (configs come and go with sweep changes); a missing
+tracked metric on one side is likewise skipped. Non-numeric metric
+values are ignored. Independently of the baseline, every *current*
+row is checked against ``ABS_CEILINGS`` — hard per-metric budgets
+(``resilience_overhead_ratio`` <= 1.05, the fault-free resilience
+overhead budget from DESIGN.md §12) that fail the gate on the current
+value alone.
 
 CLI: ``python -m benchmarks.check_regression CURRENT --baseline
 BASELINE [--threshold 0.25]``.
@@ -44,10 +49,15 @@ TRACKED_METRICS = (
     "flat_pad_waste",           # bucketed flat-table sentinel padding
     "reduce_bytes_mesh",        # mesh-path compacted reduce output
     "mesh_vs_loop_ratio",       # distributed LFVT vs loop-path seconds
+    "resilience_overhead_ratio",  # fault-free managed path vs plain path
 )
 # wall-clock ratios only fail above this absolute value: below it the
 # kernel still beats (or matches) the reference within runner noise
 RATIO_NOISE_FLOOR = 1.25
+# hard per-metric ceilings, gated against the CURRENT value alone (no
+# baseline needed): the resilience layer's fault-free overhead budget is
+# <=5% (DESIGN.md §12) regardless of what the baseline row recorded
+ABS_CEILINGS = {"resilience_overhead_ratio": 1.05}
 
 
 def compare(current: dict, baseline: dict, threshold: float = 0.25,
@@ -55,6 +65,14 @@ def compare(current: dict, baseline: dict, threshold: float = 0.25,
     """-> (regressions, notes); each entry is a printable string."""
     regressions: list = []
     notes: list = []
+    for key, metrics in sorted(current.items()):
+        for name, ceiling in ABS_CEILINGS.items():
+            val = metrics.get(name)
+            if isinstance(val, (int, float)) and not isinstance(val, bool) \
+                    and val > ceiling:
+                regressions.append(
+                    f"{'/'.join(key)} :: {name} = {val:g} exceeds the "
+                    f"absolute ceiling {ceiling:g}")
     for key in sorted(set(current) | set(baseline)):
         if key not in current or key not in baseline:
             side = "baseline" if key not in current else "current"

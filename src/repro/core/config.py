@@ -59,16 +59,41 @@ class GlobalConfig:
         # (element ids are < universe <= 2**31 - 1)
         self.flat_pad_sentinel = 2 ** 31 - 1
 
+        ########## resilience (core/resilience.py) ##########
+        # hard ceiling of the power-of-two pair-buffer regrow protocol:
+        # round_capacity raises PairCapacityError past it instead of
+        # silently allocating toward the int32 pair-count limit
+        self.pair_cap_ceiling = 1 << 27
+        # bounded-retry policy for transient shard faults
+        self.retry_max_attempts = 3
+        self.retry_backoff_base = 0.05
+        self.retry_backoff_cap = 1.0
+        # backoff is computed+recorded, not slept, unless this is set
+        # (tests and CI stay wall-clock deterministic)
+        self.retry_sleep = False
+        # raise on empty R/S collections in the drivers (default: empty
+        # inputs legally produce empty results)
+        self.strict_validation = False
+        # pre-dispatch memory guardrail: split shards whose estimated
+        # device working set exceeds vmem_budget (resilience path only)
+        self.memory_guardrail = True
+        # fault-injection plan ("site:kind[:count];..."; REPRO_FAULT) and
+        # the seed for its deterministic corruptions
+        self.fault = ""
+        self.fault_seed = 0
+
         self.update_from_env()
 
     def update_from_env(self, prefix: str = "REPRO_") -> None:
-        """Override int/bool/str fields from ``<prefix><FIELD>`` env vars."""
+        """Override int/float/bool/str fields from ``<prefix><FIELD>`` vars."""
         for name, cur in vars(self).items():
             raw = os.environ.get(prefix + name.upper())
             if raw is None:
                 continue
             if isinstance(cur, bool):
                 setattr(self, name, raw.lower() in ("1", "true", "yes", "on"))
+            elif isinstance(cur, float):
+                setattr(self, name, float(raw))
             elif isinstance(cur, int):
                 setattr(self, name, int(raw))
             else:

@@ -38,7 +38,9 @@ except ImportError:  # pragma: no cover - older jax
 from .config import global_config
 from .measures import get_measure
 from .partition import Partitioning, hash_partition, load_aware_partition, route
-from .sets import SetCollection
+from .resilience import (build_resilience, checked_flat, collection_digest,
+                         fault_point, resilience_stats, sorted_pairs)
+from .sets import EmptyCollectionError, SetCollection
 from .tile_join import (PAIR_CAP_GRAIN, popcount_counts, qualify,
                         round_capacity, window_bounds)
 
@@ -245,10 +247,12 @@ def _shard_map_mask_fn(mesh: Mesh, axis: str, t: float, method: str,
 
 def _shard_map_reduce(blocks, mesh: Mesh, axis: str, *, t: float, method: str,
                       measure: str):
+    fault_point("device_upload")
     spec = P(axis)
     placed = tuple(
         jax.device_put(jnp.asarray(b), NamedSharding(mesh, spec)) for b in blocks
     )
+    fault_point("shard_map")
     return _shard_map_mask_fn(mesh, axis, t, method, measure)(*placed)
 
 
@@ -306,6 +310,7 @@ def _shard_map_reduce_pairs(placed, mesh: Mesh, axis: str, *, t: float,
 
     ``placed`` must already be device_put with the shard sharding (the
     regrow retry then re-runs only the compute, not the upload)."""
+    fault_point("shard_map")
     return _shard_map_pairs_fn(mesh, axis, t, method, cap, measure)(*placed)
 
 
@@ -321,6 +326,7 @@ def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
     """
     cap = round_capacity(max(cap_hint, 1))
     regrows = 0
+    fault_point("device_upload")
     if mesh is not None:  # upload once; regrow retries reuse the placement
         spec = P(axis)
         placed = tuple(
@@ -329,6 +335,7 @@ def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
     else:
         placed = tuple(jnp.asarray(a) for a in block.arrays)
     while True:
+        fault_point("compact")
         if mesh is not None:
             pairs_dev, counts_dev = _shard_map_reduce_pairs(
                 placed, mesh, axis, t=t, method=method, cap=cap,
@@ -340,6 +347,7 @@ def _block_pairs_reduce(block: ShardBlock, *, t: float, method: str,
         mx = int(counts.max(initial=0))
         if mx <= cap:
             return pairs_dev, counts, cap, regrows
+        fault_point("regrow")
         cap = round_capacity(mx)
         regrows += 1
 
@@ -400,9 +408,45 @@ def _kernel_block_pairs(block: ShardBlock, *, t: float, method: str,
 # ---------------------------------------------------------------------- #
 # reduce phase — flat-LFVT loop path (method='lfvt', DESIGN.md §9)
 # ---------------------------------------------------------------------- #
+_PEAK_KEYS = ("peak_mask", "peak_inter", "walk_vmem", "waste_max")
+
+
+def _fold_delta(acc: dict, delta: dict) -> None:
+    """Fold a resilience task's stat deltas into a driver accumulator:
+    peaks combine by max, counters by sum, non-numeric keys (the rung
+    name) are dropped."""
+    for k, v in delta.items():
+        if k in acc and isinstance(v, (int, float)) \
+                and not isinstance(v, bool):
+            acc[k] = max(acc[k], v) if k in _PEAK_KEYS else acc[k] + v
+
+
+def _sub_collection(C: SetCollection, rows) -> SetCollection:
+    """Row-subset collection keeping global ids (oracle-rung input)."""
+    return SetCollection([C.sets[int(i)] for i in rows], C.universe,
+                         C.ids[rows].astype(np.int32))
+
+
+def _guardrail_spans(rows, n_cols: int, res) -> list:
+    """Pre-dispatch memory guardrail: split a shard's R rows so the
+    estimated dense (|rows|, n_cols) int32 working set fits the VMEM
+    budget. Active only on the resilience path."""
+    if res is None or not global_config.memory_guardrail or not len(rows):
+        return [rows]
+    est = len(rows) * n_cols * 4
+    budget = int(global_config.vmem_budget)
+    if est <= budget:
+        return [rows]
+    chunks = min(len(rows), -(-est // budget))
+    spans = [c for c in np.array_split(np.asarray(rows), chunks) if len(c)]
+    res.guardrail_splits += len(spans) - 1
+    return spans
+
+
 def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
                     *, emit: str, pair_capacity: int | None, measure: str,
-                    stats: dict | None, impl: str = "kernel") -> set:
+                    stats: dict | None, impl: str = "kernel",
+                    res=None) -> set:
     """Per-shard flat-LFVT reduce on the sequential loop path.
 
     The map side routes rows exactly like the bitmap paths, but each
@@ -428,17 +472,20 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
     r_sizes = R.sizes()
     r_pad_all, _ = R.padded()
     pairs: set = set()
-    acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
-           "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0,
-           "walk_steps": 0, "early_stops": 0, "live": 0, "walk_vmem": 0}
 
-    def dispatch(k: int) -> dict | None:
-        rs, ss = r_rows[k], s_rows[k]
+    def zero_acc() -> dict:
+        return {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
+                "peak_mask": 0, "peak_inter": 0, "ship": 0, "shards": 0,
+                "walk_steps": 0, "early_stops": 0, "live": 0, "walk_vmem": 0}
+
+    acc = zero_acc()
+
+    def dispatch(rs, ss, acc: dict, use_impl: str) -> dict | None:
         if not len(rs) or not len(ss):
             return None
         sub = SetCollection([S.sets[int(j)] for j in ss], S.universe,
                             S.ids[ss].astype(np.int32))
-        flat = sub.flat_lfvt()
+        flat = checked_flat(sub.flat_lfvt())
         r_pad, sz = r_pad_all[rs], r_sizes[rs]
         lo, hi = window_bounds(sz, flat.s_sizes, t, measure)
         # map-output bytes: the serialized flat arrays + the shard's R rows
@@ -449,7 +496,7 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
         # 'lfvt', the whole-block jnp walk for 'lfvt_ref'); emit='mask'
         # is resolved by ``join_mask_finalize`` instead of compaction
         ctx = {"rs": rs, "flat": flat}
-        if impl == "ref":
+        if use_impl == "ref":
             ctx["pending"] = kops.lfvt_join_pairs_dispatch(
                 flat, jnp.asarray(r_pad), jnp.asarray(sz), jnp.asarray(lo),
                 jnp.asarray(hi), t, measure=measure)
@@ -458,7 +505,7 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
                 flat, r_pad, sz, lo, hi, t, measure=measure)
         return ctx
 
-    def finalize(ctx: dict) -> None:
+    def finalize(ctx: dict, acc: dict, out_pairs: set) -> None:
         rs, flat = ctx["rs"], ctx["flat"]
         if emit == "pairs":
             kstats: dict = {}
@@ -495,18 +542,62 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
         if len(local):
             rid = R.ids[rs[local[:, 0]]]
             sid = flat.s_ids[local[:, 1]]
-            pairs.update(zip(map(int, rid), map(int, sid)))
+            out_pairs.update(zip(map(int, rid), map(int, sid)))
 
-    in_flight: dict | None = None
-    for k in range(part.n_shards):
-        ctx = dispatch(k)
+    if res is None:
+        in_flight: dict | None = None
+        for k in range(part.n_shards):
+            ctx = dispatch(r_rows[k], s_rows[k], acc, impl)
+            if in_flight is not None:
+                finalize(in_flight, acc, pairs)
+                in_flight = None
+            if ctx is not None:
+                in_flight = ctx
         if in_flight is not None:
-            finalize(in_flight)
-            in_flight = None
-        if ctx is not None:
-            in_flight = ctx
-    if in_flight is not None:
-        finalize(in_flight)
+            finalize(in_flight, acc, pairs)
+    else:
+        # resilience ladder per shard (DESIGN.md §12): the kernel walk
+        # degrades to the whole-block jnp walk, then to the host oracle;
+        # oversized shards are guardrail-split before dispatch
+        from .join import brute_force_join  # deferred: the oracle rung
+
+        def run_impl(use_impl: str, rs, ss):
+            sub_acc, sub_pairs = zero_acc(), set()
+            ctx = dispatch(rs, ss, sub_acc, use_impl)
+            if ctx is not None:
+                finalize(ctx, sub_acc, sub_pairs)
+            return sorted_pairs(sub_pairs), sub_acc
+
+        def oracle(rs, ss):
+            got = brute_force_join(_sub_collection(R, rs),
+                                   _sub_collection(S, ss), t,
+                                   measure=measure)
+            sub_acc = zero_acc()
+            sub_acc["shards"] += 1
+            if emit == "pairs":
+                sub_acc["result"] = len(got)
+            return sorted_pairs(got), sub_acc
+
+        for k in range(part.n_shards):
+            rs, ss = r_rows[k], s_rows[k]
+            if not len(rs) or not len(ss):
+                continue
+            spans = _guardrail_spans(rs, len(ss), res)
+            for si, sub_rs in enumerate(spans):
+                tid = f"lfvt_loop/{impl}/{emit}/{measure}/shard={k}"
+                if len(spans) > 1:
+                    tid += f"/span={si}"
+                rungs = [("lfvt" if impl == "kernel" else "lfvt_ref",
+                          functools.partial(run_impl, impl, sub_rs, ss))]
+                if impl == "kernel":
+                    rungs.append(("lfvt_ref",
+                                  functools.partial(run_impl, "ref",
+                                                    sub_rs, ss)))
+                rungs.append(("oracle",
+                              functools.partial(oracle, sub_rs, ss)))
+                got, delta = res.run(tid, rungs)
+                pairs.update((int(a), int(b)) for a, b in got)
+                _fold_delta(acc, delta)
 
     n_result = acc["result"] if emit == "pairs" else len(pairs)
     if stats is not None:
@@ -525,6 +616,7 @@ def _lfvt_loop_join(R: SetCollection, S: SetCollection, t: float, part,
             shard_block_bytes=acc["ship"],
             shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
             pad_waste_max=0.0, pad_waste_mean=0.0)
+        resilience_stats(stats, res)
     return pairs
 
 
@@ -690,7 +782,7 @@ def _lfvt_bucket_arrays(bucket, caps, Lr, r_pad_all, r_sizes_all, R_ids,
 def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
                     mesh: Mesh, axis: str, *, emit: str, pad: str,
                     pair_capacity: int | None, measure: str,
-                    stats: dict | None) -> set:
+                    stats: dict | None, res=None) -> set:
     """MR-CF-RS-Join/LFVT under shard_map: the paper's headline method as
     a real multi-device mesh path (DESIGN.md §11).
 
@@ -743,47 +835,50 @@ def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
         buckets.setdefault(key, []).append((k, flat, rs, lr_k))
 
     pairs: set = set()
-    acc = {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
-           "peak_mask": 0, "peak_inter": 0, "ship": 0,
-           "walk_steps": 0, "early_stops": 0, "walk_vmem": 0}
-    waste_parts: list[float] = []
+
+    def zero_acc() -> dict:
+        return {"reduce": 0, "result": 0, "regrows": 0, "dense": 0,
+                "peak_mask": 0, "peak_inter": 0, "ship": 0,
+                "walk_steps": 0, "early_stops": 0, "walk_vmem": 0,
+                "waste_sum": 0.0, "waste_max": 0.0, "waste_n": 0}
+
+    acc = zero_acc()
     cap_hint = pair_capacity if pair_capacity else PAIR_CAP_GRAIN
     tm = global_config.row_tile
-    for key in sorted(buckets):
-        bucket = buckets[key]
+
+    def run_bucket(bucket, caps, lr_b, acc: dict, out_pairs: set) -> None:
+        """One bucket's pack + walk + emit (the mesh rung body)."""
         K = len(bucket)
-        # mp rounds up to the row-tile multiple: the shard-local walk
-        # runs the tiled twin over a static all-tiles schedule, and the
-        # extra rows are -1-padded with lo = hi = 0 (dead lanes);
-        # lane width slices to the bucket max|r| (columns past a row's
-        # own size are -1 pads, so slicing drops only dead lanes)
-        caps = (-(-max(len(rs) for _, _, rs, _ in bucket) // tm) * tm,
-                max(f.n_sets for _, f, _, _ in bucket),
-                max(max(len(f.entry_elem), 1) for _, f, _, _ in bucket),
-                max(max(len(f.seq_row), 1) for _, f, _, _ in bucket),
-                max(f.max_seq_len for _, f, _, _ in bucket))
-        lr_b = min(max(lr for _, _, _, lr in bucket), Lr) if Lr else 1
+        for _, flat, _, _ in bucket:
+            checked_flat(flat)  # injected-corruption detection site
         arrays, r_ids, s_ids, used, alloc = _lfvt_bucket_arrays(
             bucket, caps, lr_b, r_pad_all, r_sizes_all, R.ids, t, measure)
-        waste_parts.extend(1.0 - used / alloc)
+        w = 1.0 - used / alloc
+        acc["waste_sum"] += float(w.sum())
+        acc["waste_max"] = max(acc["waste_max"], float(w.max(initial=0.0)))
+        acc["waste_n"] += len(w)
         acc["ship"] += 4 * K * int(alloc)
         mp, np_ = caps[0], caps[1]
         acc["dense"] += K * mp * np_
         submesh = _lfvt_submesh(mesh, axis, K)
         spec = P(axis)
+        fault_point("device_upload")
         placed = tuple(
             jax.device_put(a, NamedSharding(submesh, spec)) for a in arrays)
+        fault_point("shard_map")
         masks_dev, steps_dev, stops_dev = _lfvt_walk_fn(
             submesh, axis, t, measure, caps[4], tm)(*placed)
         if emit == "pairs":
             cap = round_capacity(max(cap_hint, 1))
             while True:  # PR-2 regrow: exact counts, compact-only rerun
+                fault_point("compact")
                 pairs_dev, counts_dev = _lfvt_compact_fn(
                     submesh, axis, cap)(masks_dev)
                 counts = np.asarray(counts_dev).reshape(-1)
                 mx = int(counts.max(initial=0))
                 if mx <= cap:
                     break
+                fault_point("regrow")
                 cap = round_capacity(mx)
                 acc["regrows"] += 1
             for lk in range(K):
@@ -793,8 +888,8 @@ def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
                     rid = r_ids[lk, local[:, 0]]
                     sid = s_ids[lk, local[:, 1]]
                     keep = (rid >= 0) & (sid >= 0)
-                    pairs.update(zip(map(int, rid[keep]),
-                                     map(int, sid[keep])))
+                    out_pairs.update(zip(map(int, rid[keep]),
+                                         map(int, sid[keep])))
             acc["reduce"] += int(counts.sum()) * 8 + K * 4
             acc["result"] += int(counts.sum())
             acc["peak_mask"] = max(acc["peak_mask"], mp * np_)
@@ -804,7 +899,7 @@ def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
             masks = np.asarray(masks_dev)
             for lk in range(K):
                 rr, cc = np.nonzero(masks[lk])
-                pairs.update(
+                out_pairs.update(
                     (int(r_ids[lk, i]), int(s_ids[lk, j]))
                     for i, j in zip(rr, cc)
                     if r_ids[lk, i] >= 0 and s_ids[lk, j] >= 0)
@@ -820,9 +915,82 @@ def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
             acc["walk_vmem"],
             _lw.walk_vmem_tile_bytes(tm, lr_b, np_, caps[3]))
 
+    for key in sorted(buckets):
+        bucket = buckets[key]
+        K = len(bucket)
+        # mp rounds up to the row-tile multiple: the shard-local walk
+        # runs the tiled twin over a static all-tiles schedule, and the
+        # extra rows are -1-padded with lo = hi = 0 (dead lanes);
+        # lane width slices to the bucket max|r| (columns past a row's
+        # own size are -1 pads, so slicing drops only dead lanes)
+        caps = (-(-max(len(rs) for _, _, rs, _ in bucket) // tm) * tm,
+                max(f.n_sets for _, f, _, _ in bucket),
+                max(max(len(f.entry_elem), 1) for _, f, _, _ in bucket),
+                max(max(len(f.seq_row), 1) for _, f, _, _ in bucket),
+                max(f.max_seq_len for _, f, _, _ in bucket))
+        lr_b = min(max(lr for _, _, _, lr in bucket), Lr) if Lr else 1
+        if res is None:
+            run_bucket(bucket, caps, lr_b, acc, pairs)
+            continue
+        # resilience ladder per bucket (DESIGN.md §12): mesh -> per-shard
+        # loop walk -> host oracle; an over-budget bucket skips straight
+        # to the loop rung (memory guardrail)
+        from repro.kernels import ops as kops
+        from .join import brute_force_join
+        tid = (f"lfvt_mesh/{emit}/{measure}/shards="
+               + "-".join(str(k) for k, _, _, _ in bucket))
+
+        def mesh_rung(bucket=bucket, caps=caps, lr_b=lr_b):
+            sub_acc, sub_pairs = zero_acc(), set()
+            run_bucket(bucket, caps, lr_b, sub_acc, sub_pairs)
+            return sorted_pairs(sub_pairs), sub_acc
+
+        def loop_rung(bucket=bucket):
+            sub_acc, sub_pairs = zero_acc(), set()
+            for _, flat, rs, _ in bucket:
+                checked_flat(flat)
+                sz = r_sizes_all[rs]
+                lo, hi = window_bounds(sz, flat.s_sizes, t, measure)
+                pp, nk = kops.lfvt_join_pairs(
+                    flat, jnp.asarray(r_pad_all[rs]), jnp.asarray(sz),
+                    jnp.asarray(lo), jnp.asarray(hi), t,
+                    capacity=pair_capacity, measure=measure)
+                local = np.asarray(pp[:nk] if nk else pp[:0])
+                if len(local):
+                    rid = R.ids[rs[local[:, 0]]]
+                    sid = flat.s_ids[local[:, 1]]
+                    sub_pairs.update(zip(map(int, rid), map(int, sid)))
+                if emit == "pairs":
+                    sub_acc["result"] += nk
+                sub_acc["reduce"] += 8 * nk + 4
+            return sorted_pairs(sub_pairs), sub_acc
+
+        def oracle_rung(bucket=bucket):
+            sub_acc, sub_pairs = zero_acc(), set()
+            for _, flat, rs, _ in bucket:
+                ss = np.nonzero(np.isin(
+                    np.asarray(S.ids), np.asarray(flat.s_ids)))[0]
+                got = brute_force_join(_sub_collection(R, rs),
+                                       _sub_collection(S, ss), t,
+                                       measure=measure)
+                sub_pairs.update(got)
+                if emit == "pairs":
+                    sub_acc["result"] += len(got)
+            return sorted_pairs(sub_pairs), sub_acc
+
+        rungs = [("mesh", mesh_rung)]
+        mp, np_ = caps[0], caps[1]
+        if (global_config.memory_guardrail
+                and K * mp * np_ * 4 > int(global_config.vmem_budget)):
+            res.degradations.append(f"{tid}:mesh->loop(guardrail)")
+            rungs = []
+        rungs += [("loop", loop_rung), ("oracle", oracle_rung)]
+        got, delta = res.run(tid, rungs)
+        pairs.update((int(a), int(b)) for a, b in got)
+        _fold_delta(acc, delta)
+
     n_result = acc["result"] if emit == "pairs" else len(pairs)
     if stats is not None:
-        waste = np.asarray(waste_parts, np.float64)
         stats.update(route_stats)
         stats.update(
             intervals=part.intervals, psi=part.psi, n_shards=part.n_shards,
@@ -838,9 +1006,12 @@ def _lfvt_mesh_join(R: SetCollection, S: SetCollection, t: float, part,
             mesh_devices=n_devices,
             shard_block_bytes=acc["ship"],
             shard_block_bytes_per_shard=acc["ship"] / max(part.n_shards, 1),
-            pad_waste_max=float(waste.max(initial=0.0)),
-            pad_waste_mean=float(waste.mean()) if len(waste) else 0.0,
-            flat_pad_waste=float(waste.mean()) if len(waste) else 0.0)
+            pad_waste_max=acc["waste_max"],
+            pad_waste_mean=(acc["waste_sum"] / acc["waste_n"]
+                            if acc["waste_n"] else 0.0),
+            flat_pad_waste=(acc["waste_sum"] / acc["waste_n"]
+                            if acc["waste_n"] else 0.0))
+        resilience_stats(stats, res)
     return pairs
 
 
@@ -875,7 +1046,8 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                   axis: str | None = None, stats: dict | None = None,
                   emit: str = "pairs", pad: str | None = None,
                   pair_capacity: int | None = None,
-                  measure: str = "jaccard") -> set:
+                  measure: str = "jaccard", fault_plan=None,
+                  checkpoint_dir: str | None = None) -> set:
     """Distributed candidate-free R-S join. Returns {(r_id, s_id)}.
 
     strategy: 'load_aware' (paper Eq. 2-3) | 'hash' (ablation baseline)
@@ -909,6 +1081,13 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
               ``shard_blocks``; defaults to ``global_config.pad_mode``.
     pair_capacity: initial per-shard pair-buffer capacity hint for
               emit='pairs'; regrown automatically on overflow.
+    fault_plan: a ``resilience.FaultPlan`` (or spec string, or "" for an
+              explicitly-armed empty plan) enabling the per-task
+              retry/degradation ladder (DESIGN.md §12); defaults to
+              ``REPRO_FAULT`` from the environment via ``build_resilience``.
+    checkpoint_dir: directory for the shard task ledger; completed shard
+              tasks are checkpointed and skipped on resume (bit-identical
+              output, ``stats['tasks_resumed']`` counts the skips).
 
     ``axis`` and ``pad`` default to ``global_config`` (core/config.py)
     when None.
@@ -922,7 +1101,14 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
     if method not in ("popcount", "onehot", "kernel_bitmap", "kernel_onehot",
                       "lfvt", "lfvt_ref"):
         raise ValueError(f"unknown method {method!r}")
+    R.validate()
+    S.validate()
+    res = build_resilience(checkpoint_dir, fault_plan)
     if not len(R) or not len(S):
+        if global_config.strict_validation:
+            side = "R" if not len(R) else "S"
+            raise EmptyCollectionError(
+                f"empty {side} collection (strict_validation is on)")
         if stats is not None:  # consumers index these unconditionally
             stats.update(
                 n_shards=0, emit=emit, measure=measure, result_pairs=0,
@@ -934,12 +1120,20 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
                 shard_block_bytes_per_shard=0.0, pad_waste_max=0.0,
                 pad_waste_mean=0.0, pad=pad, n_buckets=0, intervals=[],
                 psi=0.0)
+            resilience_stats(stats, res)
         return set()
     # int32 exactness guard for the device predicate (DESIGN.md §8)
     get_measure(measure).validate(
         t, max(int(R.sizes().max(initial=0)), int(S.sizes().max(initial=0))))
     part = (load_aware_partition if strategy == "load_aware" else hash_partition)(
         R, S, t, n_shards, measure=measure)
+    if res is not None and res.ledger.dir:
+        res.ledger.open_run({
+            "version": 1, "driver": "mr_cf_rs_join", "t": float(t),
+            "n_shards": int(n_shards), "strategy": strategy,
+            "method": method, "emit": emit, "measure": measure,
+            "pad": pad, "R": collection_digest(R),
+            "S": collection_digest(S)})
     if method in ("lfvt", "lfvt_ref"):
         if mesh is not None:
             if method == "lfvt_ref":
@@ -953,12 +1147,12 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
             return _lfvt_mesh_join(R, S, t, part, mesh, axis, emit=emit,
                                    pad=pad_mode,
                                    pair_capacity=pair_capacity,
-                                   measure=measure, stats=stats)
+                                   measure=measure, stats=stats, res=res)
         return _lfvt_loop_join(R, S, t, part, emit=emit,
                                pair_capacity=pair_capacity, measure=measure,
                                stats=stats,
                                impl="ref" if method == "lfvt_ref" else
-                               "kernel")
+                               "kernel", res=res)
     pad_mode = pad if pad != "auto" else ("global" if mesh is not None
                                           else "bucket")
     if mesh is not None and pad_mode != "global":
@@ -969,50 +1163,53 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
 
     pairs: set = set()
     dense_bytes = sum(b.n_local * b.m_pad * b.n_pad for b in blocks)
-    reduce_bytes = 0
-    peak_intermediate = 0
-    peak_mask = 0
-    n_result = 0
-    regrows = 0
-    live = total_tiles = 0
     cap_hint = pair_capacity if pair_capacity else PAIR_CAP_GRAIN
     kernel_loop = (mesh is None and emit == "pairs"
                    and method in ("kernel_bitmap", "kernel_onehot"))
-    for block in blocks:
+
+    def zero_block_acc() -> dict:
+        return {"reduce": 0, "result": 0, "regrows": 0, "peak_mask": 0,
+                "peak_inter": 0, "live": 0, "total_tiles": 0}
+
+    acc = zero_block_acc()
+
+    def run_block(block, acc: dict, out_pairs: set, use_mesh) -> None:
+        """One ShardBlock's reduce + emit (primary / loop rung body)."""
         if kernel_loop:
             per_shard, counts, out_b, rg, lv, tt, staged = (
                 _kernel_block_pairs(block, t=t, method=method,
                                     cap_hint=pair_capacity, measure=measure))
             for lk, local in enumerate(per_shard):
-                _emit_shard_pairs(block, lk, local, pairs)
-            reduce_bytes += out_b
-            regrows += rg
-            live += lv
-            total_tiles += tt
-            n_result += int(counts.sum())
+                _emit_shard_pairs(block, lk, local, out_pairs)
+            acc["reduce"] += out_b
+            acc["regrows"] += rg
+            acc["live"] += lv
+            acc["total_tiles"] += tt
+            acc["result"] += int(counts.sum())
             # the staged (L, TM, TN) live-tile masks are what resides on
             # device — tile padding can exceed the shard's m_pad*n_pad
-            peak_mask = max(peak_mask, staged)
-            peak_intermediate = max(peak_intermediate, staged)
+            acc["peak_mask"] = max(acc["peak_mask"], staged)
+            acc["peak_inter"] = max(acc["peak_inter"], staged)
         elif emit == "pairs":
             pairs_dev, counts, cap, rg = _block_pairs_reduce(
                 block, t=t, method=method, cap_hint=cap_hint,
-                mesh=mesh, axis=axis, measure=measure)
-            _collect_block_pairs(block, pairs_dev, counts, pairs)
+                mesh=use_mesh, axis=axis, measure=measure)
+            _collect_block_pairs(block, pairs_dev, counts, out_pairs)
             # variable-length reduce output: each shard ships its exact
             # slice + one count; the cap buffer never leaves the device
-            reduce_bytes += int(counts.sum()) * 8 + block.n_local * 4
-            regrows += rg
-            n_result += int(counts.sum())
+            acc["reduce"] += int(counts.sum()) * 8 + block.n_local * 4
+            acc["regrows"] += rg
+            acc["result"] += int(counts.sum())
             # one shard-local mask (per map step / per device) + the
             # compacted per-shard output buffers
-            peak_mask = max(peak_mask, block.m_pad * block.n_pad)
-            peak_intermediate = max(
-                peak_intermediate,
+            acc["peak_mask"] = max(acc["peak_mask"],
+                                   block.m_pad * block.n_pad)
+            acc["peak_inter"] = max(
+                acc["peak_inter"],
                 block.m_pad * block.n_pad + block.n_local * (cap * 8 + 4))
         else:
-            if mesh is not None:
-                masks_dev = _shard_map_reduce(block.arrays, mesh, axis,
+            if use_mesh is not None:
+                masks_dev = _shard_map_reduce(block.arrays, use_mesh, axis,
                                               t=t, method=method,
                                               measure=measure)
             else:
@@ -1022,16 +1219,61 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
             masks = np.asarray(masks_dev)
             for lk in range(block.n_local):
                 rr, ss = np.nonzero(masks[lk])
-                pairs.update(
+                out_pairs.update(
                     (int(block.r_ids[lk, i]), int(block.s_ids[lk, j]))
                     for i, j in zip(rr, ss)
                     if block.r_ids[lk, i] >= 0 and block.s_ids[lk, j] >= 0
                 )
-            reduce_bytes += masks.size
-            peak_mask = max(peak_mask, masks.size)
-            peak_intermediate = max(peak_intermediate, masks.size)
-    if emit == "mask":
-        n_result = len(pairs)
+            acc["reduce"] += masks.size
+            acc["peak_mask"] = max(acc["peak_mask"], masks.size)
+            acc["peak_inter"] = max(acc["peak_inter"], masks.size)
+
+    if res is None:
+        for block in blocks:
+            run_block(block, acc, pairs, mesh)
+    else:
+        # resilience ladder per block (DESIGN.md §12): primary reduce ->
+        # single-device loop rerun (mesh runs only) -> host oracle over
+        # the shards' original sets (ids mapped back through R.ids/S.ids)
+        from .join import brute_force_join
+        r_rowmap = {int(v): i for i, v in enumerate(np.asarray(R.ids))}
+        s_rowmap = {int(v): i for i, v in enumerate(np.asarray(S.ids))}
+
+        for bi, block in enumerate(blocks):
+            def primary(use_mesh, block=block):
+                def run():
+                    sub_acc, sub_pairs = zero_block_acc(), set()
+                    run_block(block, sub_acc, sub_pairs, use_mesh)
+                    return sorted_pairs(sub_pairs), sub_acc
+                return run
+
+            def oracle(block=block):
+                sub_acc, sub_pairs = zero_block_acc(), set()
+                for lk in range(block.n_local):
+                    rrows = np.asarray(
+                        [r_rowmap[int(v)] for v in block.r_ids[lk] if v >= 0],
+                        np.int64)
+                    srows = np.asarray(
+                        [s_rowmap[int(v)] for v in block.s_ids[lk] if v >= 0],
+                        np.int64)
+                    got = brute_force_join(_sub_collection(R, rrows),
+                                           _sub_collection(S, srows), t,
+                                           measure=measure)
+                    sub_pairs.update(got)
+                if emit == "pairs":
+                    sub_acc["result"] = len(sub_pairs)
+                return sorted_pairs(sub_pairs), sub_acc
+
+            tid = f"block_join/{method}/{emit}/{measure}/block={bi}"
+            rungs = [("mesh" if mesh is not None else method, primary(mesh))]
+            if mesh is not None:
+                rungs.append(("loop", primary(None)))
+            rungs.append(("oracle", oracle))
+            got, delta = res.run(tid, rungs)
+            pairs.update((int(a), int(b)) for a, b in got)
+            _fold_delta(acc, delta)
+
+    n_result = len(pairs) if emit == "mask" else acc["result"]
     if stats is not None:
         stats.update(route_stats)
         stats["intervals"] = part.intervals
@@ -1044,15 +1286,16 @@ def mr_cf_rs_join(R: SetCollection, S: SetCollection, t: float,
         # quantity the paper's shuffle/disk accounting charges the reduce
         # output with (vs the dense per-shard masks)
         stats["pair_bytes"] = n_result * 8
-        stats["reduce_bytes"] = reduce_bytes
+        stats["reduce_bytes"] = acc["reduce"]
         stats["dense_mask_bytes"] = dense_bytes
-        stats["reduce_intermediate_peak_bytes"] = peak_intermediate
+        stats["reduce_intermediate_peak_bytes"] = acc["peak_inter"]
         # largest boolean mask ever resident at once: one shard's
         # (m_pad, n_pad) for emit='pairs', the whole stacked bucket for
         # emit='mask' — the assertion target for "no dense stack"
-        stats["reduce_mask_peak_bytes"] = peak_mask
-        stats["regrows"] = regrows
+        stats["reduce_mask_peak_bytes"] = acc["peak_mask"]
+        stats["regrows"] = acc["regrows"]
         if kernel_loop:
-            stats["live_tiles"] = live
-            stats["total_tiles"] = total_tiles
+            stats["live_tiles"] = acc["live"]
+            stats["total_tiles"] = acc["total_tiles"]
+        resilience_stats(stats, res)
     return pairs

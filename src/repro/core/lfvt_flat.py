@@ -67,8 +67,15 @@ from .config import global_config
 from .fvt import FVT, LFVT
 from .sets import SetCollection
 
-__all__ = ["FlatLFVT", "FlatLFVTDevice", "encode", "flat_join_mask",
-           "flat_walk_caps", "pad_flat_tables", "entry_positions"]
+__all__ = ["FlatLFVT", "FlatLFVTDevice", "FlatLFVTError", "encode",
+           "flat_join_mask", "flat_walk_caps", "pad_flat_tables",
+           "entry_positions"]
+
+
+class FlatLFVTError(ValueError):
+    """A ``FlatLFVT`` violates its structural invariants — corrupted or
+    untrusted arrays (checkpoint loads, fault injection) caught by
+    :meth:`FlatLFVT.validate` before a walk can chase bad indices."""
 
 
 class FlatLFVTDevice(NamedTuple):
@@ -162,6 +169,83 @@ class FlatLFVT:
     def children(self, nid: int) -> np.ndarray:
         return self.child_ids[
             int(self.child_indptr[nid]): int(self.child_indptr[nid + 1])]
+
+    # -------------------------------------------------------------- #
+    def validate(self) -> "FlatLFVT":
+        """Cheap structural check of the linear arrays (all vectorized,
+        O(N + T + E + n)); raises :class:`FlatLFVTError` on the first
+        violated invariant, returns ``self`` for chaining.
+
+        Meant for untrusted tables — checkpoint loads and the fault
+        harness's corruption site — where a bad index would otherwise
+        surface as a silent out-of-bounds gather (clamped on device!)
+        or a host IndexError deep in a walk.
+        """
+        def fail(msg: str):
+            raise FlatLFVTError(f"FlatLFVT invariant violated: {msg}")
+
+        N, T = self.n_nodes, len(self.seq_row)
+        E, n = len(self.entry_elem), self.n_sets
+        if (len(self.node_seq_len) != N or len(self.node_parent) != N
+                or len(self.child_indptr) != N + 1
+                or len(self.owner_indptr) != N + 1):
+            fail("node-table column lengths disagree")
+        if len(self.seq_next) != T:
+            fail("seq_row/seq_next lengths disagree")
+        if any(len(a) != E for a in
+               (self.entry_node, self.entry_off, self.entry_len)):
+            fail("entry-table column lengths disagree")
+        if len(self.s_sizes) != n:
+            fail("s_ids/s_sizes lengths disagree")
+        if N == 0:
+            fail("empty node table (the root node is mandatory)")
+        # node table: sequence slices inside [0, T), parents in [-1, N)
+        off, ln = self.node_seq_off, self.node_seq_len
+        if ((ln < 0).any() or (off < 0).any()
+                or (off.astype(np.int64) + ln > T).any()):
+            fail("node sequence slice outside [0, T)")
+        if (self.node_parent < -1).any() or (self.node_parent >= N).any():
+            fail("node_parent outside [-1, N)")
+        if int(self.node_parent[0]) != -1 or int(ln[0]) != 0:
+            fail("node 0 is not an empty-sequence root")
+        # sequence arrays: rows address S, hops stay inside the table
+        if T and ((self.seq_row < 0).any() or (self.seq_row >= n).any()):
+            fail("seq_row outside [0, n_sets)")
+        if T and ((self.seq_next < -1).any() or (self.seq_next >= T).any()):
+            fail("seq_next outside [-1, T)")
+        # entry table: sorted, sentinels a suffix, addresses in range
+        real = self.entry_elem < np.int64(self.universe)
+        n_real = int(real.sum())
+        if not real[:n_real].all():
+            fail("sentinel entry rows are not a contiguous suffix")
+        if n_real and (np.diff(self.entry_elem[:n_real]) <= 0).any():
+            fail("entry_elem not strictly increasing")
+        if E and (np.diff(self.entry_elem.astype(np.int64)) < 0).any():
+            fail("entry_elem not sorted")
+        if n_real and int(self.entry_elem[0]) < 0:
+            fail("negative entry element id")
+        if E and ((self.entry_node < 0).any()
+                  or (self.entry_node >= N).any()):
+            fail("entry_node outside [0, N)")
+        if (self.entry_len < 0).any() or (self.entry_len > T).any():
+            fail("entry_len outside [0, T]")
+        live = self.entry_len > 0
+        if live.any():
+            en, eo = self.entry_node[live], self.entry_off[live]
+            if (eo < 0).any() or (eo >= ln[en]).any():
+                fail("entry_off outside its node's sequence slice")
+        if (~real & live).any():
+            fail("sentinel entry row with a non-empty sequence")
+        # collection rows: padded (-1 id) rows a zero-size suffix
+        if (self.s_sizes < 0).any():
+            fail("negative s_sizes")
+        pad_rows = self.s_ids < 0
+        n_live = n - int(pad_rows.sum())
+        if pad_rows[:n_live].any():
+            fail("padded (-1) s_ids rows are not a contiguous suffix")
+        if pad_rows.any() and self.s_sizes[pad_rows].any():
+            fail("padded s_ids row with non-zero s_sizes")
+        return self
 
     # -------------------------------------------------------------- #
     def to_device(self) -> FlatLFVTDevice:

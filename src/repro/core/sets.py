@@ -20,7 +20,23 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["SetCollection", "length_filter_bounds", "jaccard", "similarity"]
+__all__ = ["SetCollection", "CollectionValidationError",
+           "EmptyCollectionError", "length_filter_bounds", "jaccard",
+           "similarity"]
+
+
+class CollectionValidationError(ValueError):
+    """A ``SetCollection`` violates its structural invariants (negative
+    element ids, unsorted/duplicate elements, out-of-range universe, or
+    mismatched id rows). Raised by constructors and ``validate()`` so
+    bad inputs fail with a named error instead of an opaque downstream
+    index fault."""
+
+
+class EmptyCollectionError(ValueError):
+    """An empty R or S collection reached a driver running with
+    ``global_config.strict_validation`` on. By default empty inputs are
+    legal (they produce empty joins); strict mode names them instead."""
 
 
 def _write_protect(out) -> None:
@@ -92,9 +108,14 @@ class SetCollection:
         ragged = _as_ragged(sets)
         if universe is None:
             universe = int(max((int(s[-1]) for s in ragged if len(s)), default=-1)) + 1
-        for s in ragged:
-            if len(s) and (s[0] < 0 or s[-1] >= universe):
-                raise ValueError("element id outside universe")
+        for i, s in enumerate(ragged):
+            if len(s) and s[0] < 0:
+                raise CollectionValidationError(
+                    f"set {i}: negative element id {int(s[0])}")
+            if len(s) and s[-1] >= universe:
+                raise CollectionValidationError(
+                    f"set {i}: element id {int(s[-1])} outside universe "
+                    f"[0, {universe})")
         return cls(ragged, universe, np.arange(len(ragged), dtype=np.int32))
 
     def sort_by_size(self) -> "SetCollection":
@@ -107,6 +128,43 @@ class SetCollection:
             self.ids[order],
             sorted_by_size=True,
         )
+
+    def validate(self) -> "SetCollection":
+        """Check the structural invariants of a directly-constructed
+        collection (``from_ragged`` enforces them on the way in, but
+        drivers also accept hand-built / checkpoint-loaded instances).
+
+        Raises :class:`CollectionValidationError` on the first violated
+        invariant; returns ``self`` for chaining. Memoized — drivers
+        call it per join, the scan runs once per collection.
+        """
+        def build():
+            if len(self.ids) != len(self.sets):
+                raise CollectionValidationError(
+                    f"ids length {len(self.ids)} != set count "
+                    f"{len(self.sets)}")
+            for i, s in enumerate(self.sets):
+                a = np.asarray(s)
+                if a.ndim != 1:
+                    raise CollectionValidationError(
+                        f"set {i}: not 1-D (shape {a.shape})")
+                if len(a) and int(a[0]) < 0:
+                    raise CollectionValidationError(
+                        f"set {i}: negative element id {int(a[0])}")
+                if len(a) and int(a[-1]) >= self.universe:
+                    raise CollectionValidationError(
+                        f"set {i}: element id {int(a[-1])} outside "
+                        f"universe [0, {self.universe})")
+                d = np.diff(a)
+                if len(d) and int(d.min()) <= 0:
+                    k = int(np.argmax(d <= 0))
+                    word = "duplicate" if int(d[k]) == 0 else "unsorted"
+                    raise CollectionValidationError(
+                        f"set {i}: {word} elements at position {k}")
+            return np.bool_(True)
+
+        self._memo("validated", build)
+        return self
 
     # ------------------------------------------------------------------ #
     # views

@@ -30,7 +30,10 @@ import numpy as np
 
 from . import measures
 from .config import global_config
-from .sets import SetCollection
+from .resilience import (PairCapacityError, build_resilience, checked_flat,
+                         collection_digest, fault_point, resilience_stats,
+                         sorted_pairs)
+from .sets import EmptyCollectionError, SetCollection
 
 __all__ = [
     "popcount_counts",
@@ -168,13 +171,30 @@ PAIR_CAP_GRAIN = global_config.pair_cap_grain
 
 def round_capacity(n: int) -> int:
     """Regrow protocol: next power-of-two multiple of the capacity grain
-    (``global_config.pair_cap_grain``) >= n."""
+    (``global_config.pair_cap_grain``) >= n, capped at
+    ``global_config.pair_cap_ceiling``.
+
+    Every pair-buffer allocation in the repo routes through here, so the
+    ceiling is the single guard against the doubling protocol allocating
+    toward the int32 pair-count limit: requests past it raise
+    :class:`~repro.core.resilience.PairCapacityError` (a named error the
+    degradation ladder treats as "split or fall back", never a silent
+    wrap). When the ceiling is not itself a power-of-two multiple of the
+    grain, in-range requests clamp to the ceiling instead of rounding
+    past it.
+    """
     if n <= 0:
         return 0
+    ceiling = int(global_config.pair_cap_ceiling)
+    if n > ceiling:
+        raise PairCapacityError(
+            f"pair buffer request {n} exceeds pair_cap_ceiling {ceiling} "
+            f"(raise global_config.pair_cap_ceiling / REPRO_PAIR_CAP_CEILING"
+            f" or reduce the block size)")
     cap = global_config.pair_cap_grain
     while cap < n:
         cap *= 2
-    return cap
+    return min(cap, ceiling)
 
 
 
@@ -223,6 +243,7 @@ def _s_device_rep(S: SetCollection, family: str, W: int,
     arrays are uploaded once via ``to_device`` and live on the instance,
     which this cache keeps alive beside the other reps).
     """
+    fault_point("device_upload")
     entry = _S_REP_CACHE.get(S)
     if entry is None:
         entry = {}
@@ -278,6 +299,7 @@ def _r_block_rep(R: SetCollection, family: str, W: int, start: int,
     """-> (device rep of R[start:stop], cache_hit). Host rep is memoized on
     the collection (``SetCollection.bitmaps``/``padded``); this adds the
     per-block device upload."""
+    fault_point("device_upload")
     entry = _R_BLOCK_CACHE.get(R)
     if entry is None:
         entry = {}
@@ -303,7 +325,9 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                       stats: dict | None = None, emit: str = "pairs",
                       pair_capacity: int | None = None,
                       double_buffer: bool | None = None,
-                      measure: str = "jaccard") -> set:
+                      measure: str = "jaccard",
+                      fault_plan=None,
+                      checkpoint_dir: str | None = None) -> set:
     """Candidate-free device join. Returns {(r_id, s_id)}.
 
     method: 'popcount' (bitmaps, VPU) | 'onehot' (membership matmul, MXU)
@@ -332,6 +356,12 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             host, so device compute overlaps host-side result building.
             Results are identical with it off (debug knob).
 
+    fault_plan / checkpoint_dir activate the resilience layer
+    (core/resilience.py, DESIGN.md §12): per-R-block tasks run under the
+    retry + degradation ladder (method -> host oracle), with optional
+    per-block checkpoints for resume. None/None (the default) keeps the
+    original streaming path byte-for-byte.
+
     ``r_block`` and ``double_buffer`` default to ``global_config``
     (core/config.py) when None.
     """
@@ -340,12 +370,20 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         double_buffer = global_config.double_buffer
     if emit not in ("pairs", "mask"):
         raise ValueError(f"unknown emit mode {emit!r}")
+    R.validate()
+    S.validate()
+    if global_config.strict_validation and (not len(R) or not len(S)):
+        side = "R" if not len(R) else "S"
+        raise EmptyCollectionError(
+            f"empty {side} collection (strict_validation is on)")
+    res = build_resilience(checkpoint_dir, fault_plan)
     if not len(R) or not len(S):
         if stats is not None:  # consumers index these unconditionally
             stats.update(method=method, emit=emit, r_blocks=0, pair_count=0,
                          output_bytes=0, dense_mask_bytes=0,
                          double_buffered=double_buffer, regrows=0,
                          r_rep_cache_hits=0)
+            resilience_stats(stats, res)
         return set()
     family = ("lfvt" if method in ("lfvt", "lfvt_ref") else
               "onehot" if method == "onehot" else "bitmap")
@@ -369,11 +407,15 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
     # between blocks) so the byte accounting stays deterministic
     spec_cap = round_capacity(pair_capacity) if pair_capacity else (
         PAIR_CAP_GRAIN)
-    acc = {"out_sparse": 0, "out_dense": 0, "n_pairs": 0, "live": 0,
-           "total_tiles": 0, "regrows": 0, "r_rep_hits": 0,
-           "walk_steps": 0, "early_stops": 0, "walk_vmem": 0}
 
-    def fold_kernel_stats(kstats: dict) -> None:
+    def zero_acc() -> dict:
+        return {"out_sparse": 0, "out_dense": 0, "n_pairs": 0, "live": 0,
+                "total_tiles": 0, "regrows": 0, "r_rep_hits": 0,
+                "walk_steps": 0, "early_stops": 0, "walk_vmem": 0}
+
+    acc = zero_acc()
+
+    def fold_kernel_stats(acc: dict, kstats: dict) -> None:
         acc["live"] += kstats.get("live_tiles", 0)
         acc["total_tiles"] += kstats.get("total_tiles", 0)
         acc["walk_steps"] += kstats.get("walk_steps", 0)
@@ -381,9 +423,8 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         acc["walk_vmem"] = max(acc["walk_vmem"],
                                kstats.get("walk_vmem_tile_bytes", 0))
 
-    def dispatch(start: int) -> dict:
+    def dispatch(start: int, stop: int, acc: dict) -> dict:
         """Launch all of one R block's device work; no host syncs."""
-        stop = min(start + r_block, m)
         sl = slice(start, stop)
         r_rep, hit = _r_block_rep(R, family, W, start, stop)
         acc["r_rep_hits"] += hit
@@ -447,10 +488,11 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             blk["packed"] = _compact_mask(mask, size=spec_cap)
         return blk
 
-    def finalize(blk: dict) -> None:
+    def finalize(blk: dict, acc: dict, out_pairs: set) -> None:
         """Sync one block's count, regrow if the speculation overflowed,
         and fold its pairs into the result set."""
         start = blk["start"]
+        fault_point("compact")
         if kernel_pairs:
             kstats: dict = {}
             pp, n_pairs = kops.join_pairs_finalize(
@@ -459,11 +501,12 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             acc["out_sparse"] += 8 * n_pairs + 4 + kstats.get(
                 "counts_bytes", 0)
             acc["regrows"] += kstats.get("regrows", 0)
-            fold_kernel_stats(kstats)
+            fold_kernel_stats(acc, kstats)
         elif emit == "pairs":
             n_pairs = int(blk["total"])  # the only host sync per block
             cap = spec_cap
             if cap < n_pairs:  # overflow: regrow exactly once (count known)
+                fault_point("regrow")
                 cap = round_capacity(n_pairs)
                 blk["packed"] = _compact_mask(blk["mask"], size=cap)
                 acc["regrows"] += 1
@@ -477,7 +520,7 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
                 kstats = {}
                 mask_np = kops.join_mask_finalize(
                     blk["mask_pending"], blk["mb"], len(Ss), kstats)
-                fold_kernel_stats(kstats)
+                fold_kernel_stats(acc, kstats)
             else:
                 mask_np = np.asarray(blk["mask"])
             acc["out_sparse"] += mask_np.size
@@ -488,20 +531,77 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
         if len(local):
             rid = R.ids[start + local[:, 0]]
             sid = Ss.ids[local[:, 1]]
-            pairs.update(zip(map(int, rid), map(int, sid)))
+            out_pairs.update(zip(map(int, rid), map(int, sid)))
         acc["n_pairs"] += n_pairs
 
-    in_flight: dict | None = None
-    for start in range(0, m, r_block):
-        blk = dispatch(start)  # block k+1 launches before block k syncs
+    if res is None:
+        in_flight: dict | None = None
+        for start in range(0, m, r_block):
+            # block k+1 launches before block k syncs
+            blk = dispatch(start, min(start + r_block, m), acc)
+            if in_flight is not None:
+                finalize(in_flight, acc, pairs)
+            if double_buffer:
+                in_flight = blk
+            else:
+                finalize(blk, acc, pairs)
         if in_flight is not None:
-            finalize(in_flight)
-        if double_buffer:
-            in_flight = blk
-        else:
-            finalize(blk)
-    if in_flight is not None:
-        finalize(in_flight)
+            finalize(in_flight, acc, pairs)
+    else:
+        # resilience path (DESIGN.md §12): per-R-block tasks, run
+        # synchronously under the retry + degradation ladder so a retry
+        # can never double-count a block's stats or pairs
+        from .join import brute_force_join  # deferred: the oracle rung
+        if res.ledger.dir:
+            res.ledger.open_run({
+                "version": 1, "driver": "cf_rs_join_device", "t": float(t),
+                "method": method, "emit": emit, "measure": measure,
+                "r_block": int(r_block),
+                "R": collection_digest(R), "S": collection_digest(S)})
+
+        def fold(delta: dict) -> None:
+            for k, v in delta.items():
+                if k in acc and isinstance(v, (int, float)) \
+                        and not isinstance(v, bool):
+                    acc[k] = max(acc[k], v) if k == "walk_vmem" \
+                        else acc[k] + v
+
+        def primary(a: int, b: int):
+            sub_acc, sub_pairs = zero_acc(), set()
+            if family == "lfvt":
+                checked_flat(s_rep)  # injected-corruption detection site
+            finalize(dispatch(a, b, sub_acc), sub_acc, sub_pairs)
+            return sorted_pairs(sub_pairs), sub_acc
+
+        def oracle(a: int, b: int):
+            subR = SetCollection([R.sets[i] for i in range(a, b)],
+                                 R.universe, R.ids[a:b].astype(np.int32))
+            got = brute_force_join(subR, S, t, measure=measure)
+            sub_acc = zero_acc()
+            sub_acc["n_pairs"] = len(got)
+            return sorted_pairs(got), sub_acc
+
+        budget = int(global_config.vmem_budget)
+        for start in range(0, m, r_block):
+            stop = min(start + r_block, m)
+            spans = [(start, stop)]
+            if global_config.memory_guardrail:
+                # pre-dispatch guardrail: the dense (mb, n) count tile is
+                # the block's dominant device working set
+                est = (stop - start) * len(Ss) * 4
+                if est > budget:
+                    k = min(stop - start, -(-est // budget))
+                    cuts = np.linspace(start, stop, k + 1).astype(int)
+                    spans = [(int(cuts[i]), int(cuts[i + 1]))
+                             for i in range(k) if cuts[i + 1] > cuts[i]]
+                    res.guardrail_splits += len(spans) - 1
+            for a, b in spans:
+                tid = f"device_join/{method}/{emit}/{measure}/rows={a}-{b}"
+                got, delta = res.run(
+                    tid, [(method, functools.partial(primary, a, b)),
+                          ("oracle", functools.partial(oracle, a, b))])
+                pairs.update((int(r), int(s)) for r, s in got)
+                fold(delta)
 
     if stats is not None:
         stats["method"] = method
@@ -530,6 +630,7 @@ def cf_rs_join_device(R: SetCollection, S: SetCollection, t: float,
             stats["s_flat_bytes"] = s_rep.nbytes()
             stats["s_flat_seq_bytes"] = int(s_rep.seq_row.nbytes)
             stats["s_bitmap_bytes_equiv"] = len(Ss) * W * 4
+        resilience_stats(stats, res)
     return pairs
 
 

@@ -29,6 +29,7 @@ import numpy as np
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.config import global_config
+from repro.core.resilience import fault_point
 from repro.core.tile_join import PAIR_CAP_GRAIN, round_capacity
 
 from . import bitmap_join as _bj
@@ -232,6 +233,7 @@ def _join_pairs_dispatch(live_fn, defaults, r_bitmaps, r_sizes, s_bitmaps,
                          s_sizes, lo, hi, t, tiles, interpret,
                          measure="jaccard") -> PendingPairs:
     """Launch the live-tile kernel; return device handles without syncing."""
+    fault_point("walk_dispatch")
     interpret = _interpret_default() if interpret is None else interpret
     rb, r_sz, sb, s_sz, lo_p, hi_p, tls, m, n = _pad_operands(
         r_bitmaps, r_sizes, s_bitmaps, s_sizes, lo, hi, tiles, defaults)
@@ -261,6 +263,7 @@ def _remap_rows(pairs, row_map):
 def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
                         stats: dict | None = None):
     """Sync a dispatched join's counts and compact -> (pairs, n_pairs)."""
+    fault_point("compact")
     L = pending.live_tiles
     if stats is not None:
         stats["live_tiles"] = L
@@ -281,6 +284,7 @@ def join_pairs_finalize(pending: PendingPairs, capacity: int | None = None,
     cap = round_capacity(total if capacity is None else capacity)
     regrows = 0
     if cap < total:  # overflow: regrow to the exact requirement, recompact
+        fault_point("regrow")
         cap = round_capacity(total)
         regrows += 1
     pairs = (_compact_live(pending.masks, pending.tile_i, pending.tile_j,
@@ -309,6 +313,7 @@ def join_mask_finalize(pending: PendingPairs, m: int, n: int,
     so mask emission now rides the same kernel dispatch (and reports the
     same ``walk_steps``/``early_stops`` counters) as pair emission.
     """
+    fault_point("compact")
     L = pending.live_tiles
     if stats is not None:
         stats["live_tiles"] = L
@@ -421,6 +426,7 @@ def lfvt_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
     packing, power-of-two regrow — applies unchanged.
     """
     from repro.core.lfvt_flat import flat_join_mask  # deferred: no cycle
+    fault_point("walk_dispatch")
     mb, n = r_padded.shape[0], flat.n_sets
     if mb == 0 or n == 0:
         return PendingPairs(None, None, None, None, max(mb, 1), max(n, 1),
@@ -468,6 +474,7 @@ def lfvt_walk_join_pairs_dispatch(flat, r_padded, r_sizes, lo, hi, t: float,
     """
     from . import lfvt_walk as _lw
 
+    fault_point("walk_dispatch")
     if impl in (None, "auto"):
         impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if impl not in ("pallas", "jnp"):

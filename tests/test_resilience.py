@@ -1,0 +1,456 @@
+"""Resilience layer (DESIGN.md §12): fault-plan parsing, deterministic
+retry/backoff, the degradation ladder's chaos parity (loop + mesh, every
+instrumented site), checkpoint/resume (including kill -9 mid-run), and
+the pre-dispatch memory guardrail."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.config import global_config
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.resilience import (FAULT_SITES, CheckpointMismatchError,
+                                   FaultPlan, PersistentFault, Resilience,
+                                   FaultInjector, RetryPolicy, ShardFailedError,
+                                   TaskLedger, TransientFault, build_resilience,
+                                   sorted_pairs)
+from repro.core.sets import SetCollection
+from repro.core.tile_join import cf_rs_join_device
+
+
+def _rs_collections(n=30, universe=120, seed=7):
+    """R plus a near-duplicate S so mid-threshold joins are non-trivial."""
+    rng = np.random.default_rng(seed)
+    sets_r, sets_s = [], []
+    for _ in range(n):
+        b = list(rng.choice(universe, size=rng.integers(3, 12),
+                            replace=False))
+        sets_r.append(np.array(b))
+        dup = b[:-1] if len(b) > 2 and rng.random() < 0.6 else list(b)
+        sets_s.append(np.array(dup))
+    return (SetCollection.from_ragged(sets_r, universe),
+            SetCollection.from_ragged(sets_s, universe))
+
+
+R, S = _rs_collections()
+T = 0.5
+ORACLE = brute_force_join(R, S, T)
+assert ORACLE
+
+
+@pytest.fixture
+def cfg_snap():
+    snap = global_config.snapshot()
+    yield
+    global_config.restore(snap)
+
+
+# ---------------------------------------------------------------------- #
+# fault-plan grammar
+# ---------------------------------------------------------------------- #
+def test_plan_parse_multi_rule():
+    p = FaultPlan.parse("compact:transient;shard_map:persistent ; "
+                        "flat_tables:corrupt:3", seed=7)
+    assert [(r.site, r.kind, r.count) for r in p.rules] == [
+        ("compact", "transient", 1), ("shard_map", "persistent", 1),
+        ("flat_tables", "corrupt", 3)]
+    assert p.seed == 7
+    assert len(p.rules_for("compact")) == 1
+    assert p.rules_for("regrow") == []
+
+
+def test_plan_parse_empty_is_active_but_injects_nothing():
+    p = FaultPlan.parse("")
+    assert p.rules == ()
+    res = build_resilience(fault_plan="")
+    assert res is not None
+    assert res.injector.plan.rules == ()
+
+
+@pytest.mark.parametrize("spec", [
+    "nowhere:transient", "compact:explode", "compact:transient:0",
+    "compact", "compact:transient:1:extra"])
+def test_plan_parse_rejects_bad_specs(spec):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(spec)
+
+
+def test_build_resilience_inactive_by_default(cfg_snap):
+    # pin the shipped default: a REPRO_FAULT env plan (e.g. the CI chaos
+    # smoke) legitimately flips this on for the whole process
+    global_config.fault = ""
+    assert build_resilience() is None
+    assert build_resilience(checkpoint_dir=None, fault_plan=None) is None
+
+
+def test_build_resilience_env_knob(cfg_snap):
+    global_config.fault = "compact:transient"
+    res = build_resilience()
+    assert res is not None
+    assert res.injector.plan.rules[0].site == "compact"
+
+
+# ---------------------------------------------------------------------- #
+# retry policy: deterministic capped exponential backoff
+# ---------------------------------------------------------------------- #
+def test_backoff_sequence_and_cap():
+    pol = RetryPolicy(max_attempts=5, backoff_base=0.05, backoff_cap=0.3)
+    assert [pol.backoff(a) for a in (1, 2, 3, 4, 5)] == \
+        [0.05, 0.1, 0.2, 0.3, 0.3]
+    # pause computes without sleeping (sleep=False default)
+    assert pol.pause(3) == 0.2
+
+
+def _res(plan="", **policy):
+    kw = dict(max_attempts=3, backoff_base=0.05, backoff_cap=1.0)
+    kw.update(policy)
+    return Resilience(RetryPolicy(**kw),
+                      FaultInjector(FaultPlan.parse(plan)), TaskLedger())
+
+
+def test_ladder_transient_retries_then_succeeds():
+    res = _res()
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientFault("blip")
+        return sorted_pairs({(1, 2)}), {"reduce": 4}
+
+    pairs, delta = res.run("t1", [("primary", flaky)])
+    assert pairs.tolist() == [[1, 2]] and delta["rung"] == "primary"
+    assert res.retries == 2 and res.degradations == []
+    assert res.backoff_total == pytest.approx(0.05 + 0.1)
+
+
+def test_ladder_degrades_on_persistent_and_records_hop():
+    res = _res()
+
+    def broken():
+        raise PersistentFault("dead rung")
+
+    def ok():
+        return sorted_pairs({(3, 4)}), {}
+
+    pairs, delta = res.run("t2", [("a", broken), ("b", ok)])
+    assert pairs.tolist() == [[3, 4]] and delta["rung"] == "b"
+    assert res.degradations == ["t2:a->b"]
+
+
+def test_ladder_exhausts_to_shard_failed():
+    res = _res()
+
+    def broken():
+        raise PersistentFault("no")
+
+    with pytest.raises(ShardFailedError, match="every degradation rung"):
+        res.run("t3", [("a", broken), ("b", broken)])
+    assert res.degradations == ["t3:a->b"]
+
+
+def test_ladder_memory_resume_skips_completed():
+    res = _res()
+    calls = []
+
+    def once():
+        calls.append(1)
+        return sorted_pairs({(5, 6)}), {"reduce": 1}
+
+    first, _ = res.run("t4", [("a", once)])
+    again, _ = res.run("t4", [("a", once)])
+    assert len(calls) == 1 and res.tasks_resumed == 1
+    np.testing.assert_array_equal(first, again)
+
+
+# ---------------------------------------------------------------------- #
+# chaos differential: loop paths, every site, transient + persistent
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["transient", "persistent"])
+@pytest.mark.parametrize("site", FAULT_SITES)
+def test_loop_chaos_parity_all_sites(site, kind):
+    stats: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=stats,
+                        fault_plan=f"{site}:{kind}")
+    assert got == ORACLE, (site, kind)
+    if stats["faults_injected"]:
+        assert stats["retries"] or stats["degradations"], (site, kind)
+
+
+@pytest.mark.parametrize("method", ["popcount", "lfvt", "lfvt_ref"])
+def test_device_driver_chaos_parity(method):
+    for plan in ("device_upload:transient", "compact:transient",
+                 "flat_tables:corrupt:2", "walk_dispatch:persistent"):
+        stats: dict = {}
+        got = cf_rs_join_device(R, S, T, method=method, stats=stats,
+                                fault_plan=plan)
+        assert got == ORACLE, (method, plan)
+
+
+@pytest.mark.parametrize("emit", ["pairs", "mask"])
+@pytest.mark.parametrize("measure", ["jaccard", "cosine", "dice", "overlap"])
+def test_chaos_parity_measures_and_emit(measure, emit):
+    oracle = brute_force_join(R, S, T, measure=measure)
+    stats: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", emit=emit,
+                        measure=measure, stats=stats,
+                        fault_plan="compact:transient;flat_tables:corrupt")
+    assert got == oracle, (measure, emit)
+    assert stats["faults_injected"] >= 1
+
+
+def test_oom_and_storm_degrade_not_fail():
+    for plan, expect in (("walk_dispatch:oom", "lfvt->lfvt_ref"),
+                         ("walk_dispatch:storm", "lfvt->lfvt_ref")):
+        stats: dict = {}
+        got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=stats,
+                            fault_plan=plan)
+        assert got == ORACLE
+        assert any(expect in d for d in stats["degradations"]), (plan, stats)
+
+
+def test_corruption_detected_and_retried():
+    stats: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=stats,
+                        fault_plan="flat_tables:corrupt:2")
+    assert got == ORACLE
+    assert stats["faults_injected"] >= 2
+    assert stats["retries"] >= 2          # detect -> clean re-read
+    assert stats["degradations"] == []    # never had to leave the rung
+
+
+def test_chaos_identical_stats_to_fault_free_baseline(cfg_snap):
+    """Degradation changes the path (visible in stats), never the result;
+    a fault-free managed run reports zero resilience activity."""
+    global_config.fault = ""  # pin: a REPRO_FAULT env plan would inject
+    stats: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=stats,
+                        fault_plan="")
+    assert got == ORACLE
+    assert stats["retries"] == 0 and stats["degradations"] == []
+    assert stats["faults_injected"] == 0 and stats["backoff_total"] == 0.0
+    # inactive layer still publishes the keys (zeros)
+    plain: dict = {}
+    assert mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=plain) == ORACLE
+    assert plain["retries"] == 0 and plain["degradations"] == []
+
+
+# ---------------------------------------------------------------------- #
+# checkpoint / resume
+# ---------------------------------------------------------------------- #
+def test_checkpoint_full_resume_bit_identical(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st1: dict = {}
+    got1 = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=st1,
+                         checkpoint_dir=d)
+    assert got1 == ORACLE and st1["tasks_resumed"] == 0
+    files = [f for f in os.listdir(d) if f.endswith(".npz")]
+    assert len(files) == st1["n_shards"] == 4
+    st2: dict = {}
+    got2 = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=st2,
+                         checkpoint_dir=d)
+    assert got2 == got1
+    assert st2["tasks_resumed"] == 4
+
+
+def test_checkpoint_partial_resume_recomputes_only_missing(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mr_cf_rs_join(R, S, T, 4, method="lfvt", checkpoint_dir=d)
+    victim = sorted(f for f in os.listdir(d) if f.endswith(".npz"))[0]
+    os.remove(os.path.join(d, victim))
+    st: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=st,
+                        checkpoint_dir=d)
+    assert got == ORACLE and st["tasks_resumed"] == 3
+
+
+def test_checkpoint_mismatch_is_named(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mr_cf_rs_join(R, S, T, 4, method="lfvt", checkpoint_dir=d)
+    with pytest.raises(CheckpointMismatchError, match="different run"):
+        mr_cf_rs_join(R, S, 0.6, 4, method="lfvt", checkpoint_dir=d)
+    with pytest.raises(CheckpointMismatchError):
+        mr_cf_rs_join(R, S, T, 4, method="popcount", checkpoint_dir=d)
+
+
+def test_checkpoint_write_failure_degrades_to_memory_only(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st: dict = {}
+    got = mr_cf_rs_join(R, S, T, 4, method="lfvt", stats=st,
+                        checkpoint_dir=d,
+                        fault_plan="checkpoint_write:persistent")
+    assert got == ORACLE
+    assert any("checkpoint->memory_only" in x for x in st["degradations"])
+    assert not [f for f in os.listdir(d) if f.endswith(".npz")]
+
+
+def test_checkpoint_works_for_bitmap_methods(tmp_path):
+    d = str(tmp_path / "ckpt")
+    got = mr_cf_rs_join(R, S, T, 4, method="popcount", checkpoint_dir=d)
+    assert got == ORACLE
+    st: dict = {}
+    assert mr_cf_rs_join(R, S, T, 4, method="popcount", stats=st,
+                         checkpoint_dir=d) == ORACLE
+    assert st["tasks_resumed"] >= 1
+
+
+def test_device_driver_checkpoint_resume(tmp_path):
+    d = str(tmp_path / "ckpt")
+    got = cf_rs_join_device(R, S, T, method="lfvt", checkpoint_dir=d)
+    assert got == ORACLE
+    st: dict = {}
+    assert cf_rs_join_device(R, S, T, method="lfvt", stats=st,
+                             checkpoint_dir=d) == ORACLE
+    assert st["tasks_resumed"] >= 1
+
+
+# ---------------------------------------------------------------------- #
+# memory guardrail
+# ---------------------------------------------------------------------- #
+def test_guardrail_splits_oversized_shards(cfg_snap):
+    global_config.vmem_budget = 1024   # tiny: every shard over budget
+    st: dict = {}
+    got = mr_cf_rs_join(R, S, T, 2, method="lfvt", stats=st, fault_plan="")
+    assert got == ORACLE
+    assert st["guardrail_splits"] >= 1
+
+
+def test_guardrail_off_means_no_splits(cfg_snap):
+    global_config.vmem_budget = 1024
+    global_config.memory_guardrail = False
+    st: dict = {}
+    got = mr_cf_rs_join(R, S, T, 2, method="lfvt", stats=st, fault_plan="")
+    assert got == ORACLE and st["guardrail_splits"] == 0
+
+
+# ---------------------------------------------------------------------- #
+# kill -9 mid-run + resume (subprocess: the checkpoint is the survivor)
+# ---------------------------------------------------------------------- #
+_KILL_SCRIPT = r"""
+import os, sys
+if os.environ.get("REPRO_TEST_MESH") == "1":
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.sets import SetCollection
+
+def _rs_collections(n=30, universe=120, seed=7):
+    rng = np.random.default_rng(seed)
+    sets_r, sets_s = [], []
+    for _ in range(n):
+        b = list(rng.choice(universe, size=rng.integers(3, 12),
+                            replace=False))
+        sets_r.append(np.array(b))
+        dup = b[:-1] if len(b) > 2 and rng.random() < 0.6 else list(b)
+        sets_s.append(np.array(dup))
+    return (SetCollection.from_ragged(sets_r, universe),
+            SetCollection.from_ragged(sets_s, universe))
+
+R, S = _rs_collections()
+t = 0.5
+mesh = None
+if os.environ.get("REPRO_TEST_MESH") == "1":
+    import jax
+    mesh = jax.make_mesh((4,), ("data",))
+ckpt = os.environ["REPRO_TEST_CKPT"]
+phase = os.environ["REPRO_TEST_PHASE"]
+plan = "checkpoint_write:kill:2" if phase == "kill" else None
+st = {}
+got = mr_cf_rs_join(R, S, t, 4, method="lfvt", mesh=mesh, stats=st,
+                    checkpoint_dir=ckpt, fault_plan=plan)
+if phase == "kill":
+    print("UNREACHABLE")            # SIGKILL fires before we get here
+else:
+    oracle = brute_force_join(R, S, t)
+    assert got == oracle, (len(got), len(oracle))
+    assert st["tasks_resumed"] >= 1, st
+    print("RESUME_OK", st["tasks_resumed"])
+"""
+
+
+def _run_kill_script(ckpt, phase, mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env["REPRO_TEST_CKPT"] = ckpt
+    env["REPRO_TEST_PHASE"] = phase
+    env["REPRO_TEST_MESH"] = "1" if mesh else "0"
+    return subprocess.run([sys.executable, "-c", _KILL_SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+
+
+@pytest.mark.parametrize("mesh", [False, True], ids=["loop", "mesh4"])
+def test_kill_and_resume_bit_identical(tmp_path, mesh):
+    ckpt = str(tmp_path / "ckpt")
+    out = _run_kill_script(ckpt, "kill", mesh)
+    assert out.returncode == -9, (out.returncode, out.stderr[-2000:])
+    assert "UNREACHABLE" not in out.stdout
+    # at least one task survived to disk before the kill
+    assert [f for f in os.listdir(ckpt) if f.endswith(".npz")]
+    out = _run_kill_script(ckpt, "resume", mesh)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RESUME_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------- #
+# mesh chaos (subprocess: real 4-device shard_map)
+# ---------------------------------------------------------------------- #
+_MESH_CHAOS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.sets import SetCollection
+
+def _rs_collections(n=30, universe=120, seed=7):
+    rng = np.random.default_rng(seed)
+    sets_r, sets_s = [], []
+    for _ in range(n):
+        b = list(rng.choice(universe, size=rng.integers(3, 12),
+                            replace=False))
+        sets_r.append(np.array(b))
+        dup = b[:-1] if len(b) > 2 and rng.random() < 0.6 else list(b)
+        sets_s.append(np.array(dup))
+    return (SetCollection.from_ragged(sets_r, universe),
+            SetCollection.from_ragged(sets_s, universe))
+
+R, S = _rs_collections()
+t = 0.5
+mesh = jax.make_mesh((4,), ("data",))
+oracle = brute_force_join(R, S, t)
+for plan in ("", "shard_map:transient", "device_upload:transient",
+             "flat_tables:corrupt:2", "compact:transient"):
+    st = {}
+    got = mr_cf_rs_join(R, S, t, 4, method="lfvt", mesh=mesh, stats=st,
+                        fault_plan=plan)
+    assert got == oracle, (plan, len(got), len(oracle))
+st = {}
+got = mr_cf_rs_join(R, S, t, 4, method="lfvt", mesh=mesh, stats=st,
+                    fault_plan="shard_map:persistent")
+assert got == oracle
+assert any("mesh->loop" in d for d in st["degradations"]), st
+st = {}
+got = mr_cf_rs_join(R, S, t, 4, method="popcount", mesh=mesh, stats=st,
+                    emit="mask", fault_plan="shard_map:persistent")
+assert got == oracle
+assert any("mesh->loop" in d for d in st["degradations"]), st
+print("MESH_CHAOS_OK")
+"""
+
+
+def test_mesh_chaos_parity_4_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _MESH_CHAOS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH_CHAOS_OK" in out.stdout

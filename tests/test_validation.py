@@ -1,0 +1,244 @@
+"""Input-validation hardening: named errors for malformed collections,
+``FlatLFVT.validate`` structural checks (+ fuzz), strict-mode empty-input
+behavior, and the pair-capacity regrow ceiling."""
+import dataclasses
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: vendored seeded-random fallback
+    from tests._hyp_fallback import given, settings, st
+
+from repro.core.config import global_config
+from repro.core.distributed import mr_cf_rs_join
+from repro.core.join import brute_force_join
+from repro.core.lfvt_flat import FlatLFVTError, pad_flat_tables
+from repro.core.resilience import PairCapacityError
+from repro.core.sets import CollectionValidationError, EmptyCollectionError, \
+    SetCollection
+from repro.core.tile_join import cf_rs_join_device, round_capacity
+
+
+def _collection(n=12, universe=60, seed=0):
+    rng = np.random.default_rng(seed)
+    return SetCollection.from_ragged(
+        [np.unique(rng.integers(0, universe, rng.integers(2, 9)))
+         for _ in range(n)], universe)
+
+
+@pytest.fixture
+def cfg_snap():
+    snap = global_config.snapshot()
+    yield
+    global_config.restore(snap)
+
+
+# ---------------------------------------------------------------------- #
+# SetCollection constructors + validate()
+# ---------------------------------------------------------------------- #
+def test_from_ragged_rejects_negative_ids():
+    with pytest.raises(CollectionValidationError, match=r"negative element"):
+        SetCollection.from_ragged([np.array([3, 1, -2])], universe=10)
+
+
+def test_from_ragged_rejects_out_of_range_universe():
+    with pytest.raises(CollectionValidationError,
+                       match=r"outside universe \[0, 5\)"):
+        SetCollection.from_ragged([np.array([0, 7])], universe=5)
+
+
+def test_from_ragged_dedupes_and_sorts():
+    C = SetCollection.from_ragged([np.array([4, 1, 4, 2])], universe=5)
+    np.testing.assert_array_equal(C.sets[0], [1, 2, 4])
+    assert C.validate() is C
+
+
+def test_validate_direct_construct_unsorted():
+    C = SetCollection([np.array([3, 1, 2], np.int32)], 5,
+                      np.arange(1, dtype=np.int32))
+    with pytest.raises(CollectionValidationError, match="unsorted"):
+        C.validate()
+
+
+def test_validate_direct_construct_duplicate():
+    C = SetCollection([np.array([1, 2, 2, 3], np.int32)], 5,
+                      np.arange(1, dtype=np.int32))
+    with pytest.raises(CollectionValidationError, match="duplicate"):
+        C.validate()
+
+
+def test_validate_direct_construct_id_row_mismatch():
+    C = SetCollection([np.array([1], np.int32)], 5,
+                      np.arange(2, dtype=np.int32))
+    with pytest.raises(CollectionValidationError, match="ids length"):
+        C.validate()
+
+
+def test_validate_is_memoized():
+    C = _collection()
+    C.validate()
+    assert "validated" in C._reps
+    assert C.validate() is C
+
+
+# ---------------------------------------------------------------------- #
+# strict_validation: empty inputs
+# ---------------------------------------------------------------------- #
+def _empty():
+    return SetCollection([], 10, np.zeros(0, np.int32))
+
+
+@pytest.mark.parametrize("driver", ["device", "mr"])
+def test_empty_inputs_default_to_empty_join(driver):
+    R, S = _empty(), _collection()
+    if driver == "device":
+        assert cf_rs_join_device(R, S, 0.5) == set()
+        assert cf_rs_join_device(S, R, 0.5) == set()
+    else:
+        assert mr_cf_rs_join(R, S, 0.5, 2) == set()
+        assert mr_cf_rs_join(S, R, 0.5, 2) == set()
+
+
+@pytest.mark.parametrize("driver", ["device", "mr"])
+def test_strict_validation_names_empty_inputs(driver, cfg_snap):
+    global_config.strict_validation = True
+    R, S = _empty(), _collection()
+    with pytest.raises(EmptyCollectionError, match="empty R"):
+        (cf_rs_join_device(R, S, 0.5) if driver == "device"
+         else mr_cf_rs_join(R, S, 0.5, 2))
+    with pytest.raises(EmptyCollectionError, match="empty S"):
+        (cf_rs_join_device(S, R, 0.5) if driver == "device"
+         else mr_cf_rs_join(S, R, 0.5, 2))
+
+
+def test_drivers_validate_inputs():
+    bad = SetCollection([np.array([3, 1], np.int32)], 5,
+                        np.arange(1, dtype=np.int32))
+    good = _collection(universe=5)
+    with pytest.raises(CollectionValidationError):
+        cf_rs_join_device(bad, good, 0.5)
+    with pytest.raises(CollectionValidationError):
+        mr_cf_rs_join(good, bad, 0.5, 2)
+
+
+# ---------------------------------------------------------------------- #
+# FlatLFVT.validate
+# ---------------------------------------------------------------------- #
+def _flat(seed=0):
+    return _collection(seed=seed).sort_by_size().flat_lfvt()
+
+
+def test_flat_validate_accepts_built_tables():
+    flat = _flat()
+    assert flat.validate() is flat
+
+
+def test_flat_validate_accepts_padded_tables():
+    flat = _flat()
+    padded = pad_flat_tables(
+        flat, n_nodes=flat.n_nodes + 3,
+        n_seq=len(flat.seq_row) + 5,
+        n_entries=len(flat.entry_elem) + 4, n_sets=flat.n_sets + 2)
+    assert padded.validate() is padded
+
+
+def _mutated(flat, field, idx, value):
+    arr = np.array(getattr(flat, field))  # memoized original is read-only
+    arr[idx] = value
+    return dataclasses.replace(flat, _device=None, **{field: arr})
+
+
+@pytest.mark.parametrize("field,idx,value,msg", [
+    ("seq_next", 0, 10 ** 6, "seq_next outside"),
+    ("seq_row", 0, -1, "seq_row outside"),
+    ("entry_len", 0, -1, "entry_len outside"),
+    ("entry_node", 0, -1, "entry_node outside"),
+    ("node_parent", 0, 0, "root"),
+    ("s_sizes", 0, -1, "negative s_sizes"),
+])
+def test_flat_validate_catches_each_perturbation(field, idx, value, msg):
+    bad = _mutated(_flat(), field, idx, value)
+    with pytest.raises(FlatLFVTError, match=msg):
+        bad.validate()
+
+
+def test_flat_validate_catches_unsorted_entries():
+    flat = _flat()
+    arr = np.array(flat.entry_elem)
+    assert len(arr) >= 2
+    arr[[0, 1]] = arr[[1, 0]]
+    bad = dataclasses.replace(flat, _device=None, entry_elem=arr)
+    with pytest.raises(FlatLFVTError):
+        bad.validate()
+
+
+def test_flat_validate_catches_column_length_mismatch():
+    flat = _flat()
+    bad = dataclasses.replace(flat, _device=None,
+                              seq_next=np.array(flat.seq_next)[:-1])
+    with pytest.raises(FlatLFVTError, match="lengths disagree"):
+        bad.validate()
+
+
+_FUZZ_FIELDS = ("node_seq_off", "node_seq_len", "node_parent", "seq_row",
+                "seq_next", "entry_elem", "entry_node", "entry_off",
+                "entry_len", "s_sizes")
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=7),
+       field=st.sampled_from(_FUZZ_FIELDS),
+       pos=st.integers(min_value=0, max_value=10 ** 6),
+       value=st.sampled_from([-10 ** 6, -2, -1, 0, 1, 2, 7, 10 ** 6]))
+def test_flat_validate_fuzz_never_misc_errors(seed, field, pos, value):
+    """A single-cell perturbation either leaves a valid table or raises
+    FlatLFVTError — never an IndexError/crash from the checker itself."""
+    flat = _flat(seed)
+    arr = np.array(getattr(flat, field))
+    if not len(arr):
+        return
+    arr[pos % len(arr)] = value
+    mutant = dataclasses.replace(flat, _device=None, **{field: arr})
+    try:
+        mutant.validate()
+    except FlatLFVTError:
+        pass
+
+
+# ---------------------------------------------------------------------- #
+# regrow ceiling (pair_cap_ceiling)
+# ---------------------------------------------------------------------- #
+def test_round_capacity_raises_past_ceiling(cfg_snap):
+    global_config.pair_cap_ceiling = 4096
+    assert round_capacity(4096) == 4096
+    with pytest.raises(PairCapacityError, match="REPRO_PAIR_CAP_CEILING"):
+        round_capacity(4097)
+
+
+def test_round_capacity_clamps_to_non_pow2_ceiling(cfg_snap):
+    # in-range requests clamp to the ceiling instead of rounding past it
+    global_config.pair_cap_ceiling = 3000
+    assert round_capacity(2500) == 3000
+    assert round_capacity(3000) == 3000
+
+
+def test_driver_raises_named_error_past_ceiling(cfg_snap):
+    R, S = _collection(30, 40, 1), _collection(30, 40, 2)
+    n_pairs = len(brute_force_join(R, S, 0.1))
+    assert n_pairs > 4
+    global_config.pair_cap_ceiling = 2  # every compaction overflows it
+    global_config.fault = ""  # pin: an active ladder would absorb this
+    with pytest.raises(PairCapacityError):
+        cf_rs_join_device(R, S, 0.1, method="popcount")
+
+
+def test_driver_degrades_to_oracle_past_ceiling(cfg_snap):
+    R, S = _collection(30, 40, 1), _collection(30, 40, 2)
+    oracle = brute_force_join(R, S, 0.1)
+    global_config.pair_cap_ceiling = 2
+    stats: dict = {}
+    got = cf_rs_join_device(R, S, 0.1, method="popcount", stats=stats,
+                            fault_plan="")
+    assert got == oracle
+    assert stats["degradations"]  # the ladder absorbed the overflow
